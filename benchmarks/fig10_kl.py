@@ -1,0 +1,30 @@
+"""Fig. 10: KL divergence of the MxP likelihood vs FP64, three
+correlation regimes x accuracy thresholds x matrix sizes."""
+import numpy as np
+
+from repro.geo.kl import kl_divergence_mxp
+from repro.geo.matern import (BETA_MEDIUM, BETA_STRONG, BETA_WEAK,
+                              generate_locations, matern_covariance)
+
+
+def run(out):
+    out("== Fig. 10: KL divergence, MxP vs FP64 likelihood ==")
+    tb = 64
+    for name, beta in (("weak", BETA_WEAK), ("medium", BETA_MEDIUM),
+                       ("strong", BETA_STRONG)):
+        out(f"correlation {name} (beta={beta}):")
+        for n in (256, 512, 768):
+            locs = generate_locations(n, seed=1)
+            cov = matern_covariance(locs, beta=beta)
+            cells = []
+            for eps in (1e-5, 1e-6, 1e-8):
+                r = kl_divergence_mxp(cov, tb, eps)
+                cells.append(f"eps={eps:7.0e}: KL={r['abs_kl']:9.3e}")
+            out(f"  n={n:5d}  " + "   ".join(cells))
+        # accuracy ordering (paper: tighter eps -> smaller divergence)
+        locs = generate_locations(512, seed=1)
+        cov = matern_covariance(locs, beta=beta)
+        kl5 = kl_divergence_mxp(cov, tb, 1e-5)["abs_kl"]
+        kl8 = kl_divergence_mxp(cov, tb, 1e-8)["abs_kl"]
+        assert kl8 <= kl5 * 1.5 + 1e-12, (kl5, kl8)
+    out("")

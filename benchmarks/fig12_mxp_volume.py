@@ -1,0 +1,31 @@
+"""Fig. 12: data-movement volume of MxP schedules vs accuracy level."""
+from repro.core.cholesky import plan_for_matrix
+from repro.core.schedule import build_schedule
+from repro.core.tiling import to_tiles
+from repro.geo.matern import (BETA_MEDIUM, BETA_STRONG, BETA_WEAK,
+                              generate_locations, matern_covariance)
+
+
+def run(out):
+    out("== Fig. 12: MxP data-movement volume vs accuracy ==")
+    n, tb = 2048, 256
+    locs = generate_locations(n, seed=2)
+    for name, beta in (("weak", BETA_WEAK), ("medium", BETA_MEDIUM),
+                       ("strong", BETA_STRONG)):
+        cov = matern_covariance(locs, beta=beta)
+        tiles = to_tiles(cov, tb)
+        f64 = build_schedule(n // tb, tb, "v3")
+        vol64 = f64.loads_bytes() + f64.stores_bytes()
+        cells = [f"fp64 {vol64/1e6:7.1f} MB"]
+        vols = {}
+        for eps in (1e-5, 1e-6, 1e-8):
+            plan = plan_for_matrix(tiles, eps)
+            s = build_schedule(n // tb, tb, "v3", plan=plan)
+            v = s.loads_bytes() + s.stores_bytes()
+            vols[eps] = v
+            hist = {k: c for k, c in plan.histogram().items() if c}
+            cells.append(f"eps={eps:.0e} {v/1e6:7.1f} MB {hist}")
+        out(f"correlation {name}: " + "\n    ".join(cells))
+        assert vols[1e-5] <= vols[1e-8] <= vol64, \
+            "volume must grow with accuracy and stay below fp64"
+    out("")

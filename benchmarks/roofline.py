@@ -1,0 +1,52 @@
+"""Roofline table: read the dry-run artifacts and print §Roofline."""
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+
+_DEFAULT = "/root/repo/experiments/dryrun_final"
+if not os.path.isdir(_DEFAULT):          # fall back to the baseline sweep
+    _DEFAULT = "/root/repo/experiments/dryrun"
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", _DEFAULT)
+
+
+def load_records(mesh="single"):
+    recs = {}
+    if not os.path.isdir(DRYRUN_DIR):
+        return recs
+    for arch in ARCHS:
+        for shape in SHAPES:
+            path = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{mesh}.json")
+            if os.path.exists(path):
+                with open(path) as f:
+                    recs[(arch, shape)] = json.load(f)
+    return recs
+
+
+def run(out):
+    out("== Roofline terms per (arch x shape), single-pod 16x16 mesh ==")
+    recs = load_records("single")
+    if not recs:
+        out("  (no dry-run artifacts found; run "
+            "python -m repro.launch.dryrun --all first)")
+        out("")
+        return
+    out(f"  {'arch':24s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+        f"{'collect':>9s} {'bound':9s} {'useful':>7s}")
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] == "skipped":
+            out(f"  {arch:24s} {shape:12s} {'—':>9s} {'—':>9s} {'—':>9s} "
+                f"{'skipped':9s}     n/a   ({r['reason'][:40]})")
+            continue
+        if r["status"] != "ok":
+            out(f"  {arch:24s} {shape:12s}  FAILED")
+            continue
+        rf = r["roofline"]
+        out(f"  {arch:24s} {shape:12s} {rf['t_compute_s']:9.4f} "
+            f"{rf['t_memory_s']:9.4f} {rf['t_collective_s']:9.4f} "
+            f"{rf['dominant']:9s} {rf.get('useful_fraction', 0):7.3f}")
+    n_ok = sum(r["status"] == "ok" for r in recs.values())
+    n_skip = sum(r["status"] == "skipped" for r in recs.values())
+    out(f"  -- {n_ok} ok, {n_skip} skipped (documented), "
+        f"{len(recs) - n_ok - n_skip} failed --")
+    out("")

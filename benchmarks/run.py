@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper figure/table.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig6 fig10 # subset
+"""
+import sys
+import time
+
+from . import (fig6_versions, fig8_volume, fig9_multidev, fig10_kl,
+               fig11_mxp_perf, fig12_mxp_volume, fig13_traces,
+               perf_cholesky, roofline)
+
+BENCHES = {
+    "fig6": fig6_versions,
+    "fig8": fig8_volume,
+    "fig9": fig9_multidev,
+    "fig10": fig10_kl,
+    "fig11": fig11_mxp_perf,
+    "fig12": fig12_mxp_volume,
+    "fig13": fig13_traces,
+    "perf_cholesky": perf_cholesky,
+    "roofline": roofline,
+}
+
+
+def main():
+    names = sys.argv[1:] or list(BENCHES)
+    failures = []
+    for name in names:
+        mod = BENCHES[name]
+        t0 = time.time()
+        try:
+            mod.run(print)
+            print(f"[{name}] OK in {time.time()-t0:.1f}s\n", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            print(f"[{name}] FAILED: {e}\n", flush=True)
+    if failures:
+        sys.exit(1)
+    print(f"== all {len(names)} benchmarks passed ==")
+
+
+if __name__ == "__main__":
+    main()

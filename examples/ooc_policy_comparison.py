@@ -1,0 +1,51 @@
+"""Reproduce the paper's policy ladder (sync/async/V1/V2/V3) on one GPU.
+
+For a sweep of matrix sizes, prints the exact data-movement volume of
+every policy (Fig. 8) and the modeled makespan/TFlop/s on the paper's
+three platforms plus the TPU v5e target (Fig. 6), including the
+cudaMalloc-overhead effect that makes naive async lose to V1.
+"""
+import numpy as np
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.analytics import HW, ascii_trace, simulate, volume_report
+from repro.core.schedule import build_schedule
+
+POLICIES = ["sync", "async", "v1", "v2", "v3"]
+NT = 16          # 16x16 tiles
+TB = 512         # of 512x512 -> 8192^2 matrix
+
+
+def main():
+    print(f"matrix {NT*TB}x{NT*TB}, tile {TB}, policies {POLICIES}\n")
+    scheds = {p: build_schedule(NT, TB, p) for p in POLICIES}
+
+    print(f"{'policy':8s} {'loads':>8s} {'C2G GB':>9s} {'G2C GB':>9s} "
+          f"{'hits':>6s} {'evict':>6s}")
+    for p, s in scheds.items():
+        rep = volume_report(s)
+        print(f"{p:8s} {rep['loads']:8d} {rep['c2g_bytes']/1e9:9.2f} "
+              f"{rep['g2c_bytes']/1e9:9.2f} {rep['cache_hits']:6d} "
+              f"{rep['evictions']:6d}")
+
+    for hw_name in ("a100-pcie", "h100-pcie", "gh200", "tpu-v5e"):
+        hw = HW[hw_name]
+        print(f"\n--- {hw_name} (modeled) ---")
+        for p, s in scheds.items():
+            r = simulate(s, hw)
+            print(f"{p:8s} makespan {r.makespan*1e3:8.1f} ms   "
+                  f"{r.tflops:6.1f} TFlop/s   "
+                  f"copy-busy {100*r.h2d_busy/r.makespan:5.1f}%")
+
+    print("\nFig.7-style trace, GH200, V3 (o=C2G # = compute g=G2C):")
+    r = simulate(scheds["v3"], HW["gh200"], record_timeline=True)
+    print(ascii_trace(r))
+    print("\nFig.7-style trace, GH200, sync:")
+    r = simulate(scheds["sync"], HW["gh200"], record_timeline=True)
+    print(ascii_trace(r))
+
+
+if __name__ == "__main__":
+    main()

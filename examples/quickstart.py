@@ -1,0 +1,47 @@
+"""Quickstart: out-of-core mixed-precision Cholesky in five lines.
+
+Factors an SPD matrix that (conceptually) exceeds device memory by
+streaming tiles through a bounded slot buffer under the static V3
+schedule, with per-tile precision chosen by the Higham-Mary criterion.
+"""
+import numpy as np
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.analytics import HW, simulate, volume_report
+from repro.core.cholesky import ooc_cholesky
+from repro.core.tiling import random_spd
+
+
+def main():
+    n, tb = 1024, 128
+    a = random_spd(n, seed=0)
+
+    # FP64 baseline (paper-faithful left-looking V3)
+    l64, sched64 = ooc_cholesky(a, tb, policy="v3")
+    err64 = np.abs(l64 - np.linalg.cholesky(a)).max()
+
+    # four-precision MxP at eps_target = 1e-8
+    lmx, schedmx = ooc_cholesky(a, tb, policy="v3", eps_target=1e-8)
+    errmx = np.abs(lmx @ lmx.T - a).max() / np.abs(a).max()
+
+    print(f"matrix {n}x{n}, tiles {tb}x{tb}")
+    print(f"FP64 V3   : max|L - chol(A)| = {err64:.2e}")
+    print(f"MxP  V3   : rel residual     = {errmx:.2e}")
+    print(f"precision histogram: {schedmx.plan.histogram()}")
+
+    v64 = volume_report(sched64)
+    vmx = volume_report(schedmx)
+    print(f"bytes moved  FP64: {v64['total_bytes']/1e6:8.1f} MB"
+          f"   MxP: {vmx['total_bytes']/1e6:8.1f} MB"
+          f"   ({v64['total_bytes']/max(vmx['total_bytes'],1):.2f}x less)")
+
+    for hw in ("a100-pcie", "gh200", "tpu-v5e"):
+        t64 = simulate(sched64, HW[hw]).makespan
+        tmx = simulate(schedmx, HW[hw]).makespan
+        print(f"{hw:10s} modeled speedup MxP vs FP64: {t64/tmx:5.2f}x")
+
+
+if __name__ == "__main__":
+    main()

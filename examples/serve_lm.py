@@ -1,0 +1,24 @@
+"""Serve a small model with batched requests (decode path demo).
+
+Runs batched greedy generation through the sharded-cache serve step —
+the same step the dry-run lowers for decode_32k / long_500k at pod scale.
+"""
+import argparse
+
+from repro.launch.serve import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    for arch in ([args.arch] if args.arch else []):
+        toks, tput = generate(arch, batch=args.batch, prompt_len=12,
+                              gen_len=12)
+        print(f"[serve] {arch}: batch {args.batch}, "
+              f"{tput:.1f} tok/s, sample row: {toks[0, :8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Executors for the statically scheduled OOC tile Cholesky.
+
+Two interpreters for the :class:`~repro.core.schedule.Schedule` op stream:
+
+* ``run_schedule_numpy``  — plain NumPy oracle (any size, any policy).
+* ``run_schedule_jax``    — the op stream is *unrolled into a single jit*:
+  LOAD/STORE become dynamic slices between the host tile store and a bounded
+  ``slots`` buffer (the "GPU memory"); compute ops run on slots.  On TPU the
+  host store is placed with ``memory_kind='pinned_host'`` so the LOAD/STORE
+  slices lower to asynchronous host<->HBM DMAs that XLA overlaps with the
+  MXU work — the TPU equivalent of the paper's multi-stream ``async`` engine
+  (DESIGN.md §2).  On CPU the same program runs with a device-resident store.
+
+Mixed precision: LOAD casts host(f64) -> tile class -> compute dtype, i.e.
+the interconnect carries class-precision bytes ("on-the-fly down-casting",
+paper §IV-C).  STORE rounds the finished tile through its class, and the
+rounded value is also written back to the slot so that later consumers see
+exactly what the paper's low-precision device tile would contain.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+
+from .schedule import Op, OpKind, Schedule, build_schedule
+from .tiling import TileLayout, to_tiles, from_tiles
+from .precision import PrecisionPlan, assign_precision, tile_norms, uniform_plan
+
+_NP_DTYPES = {
+    "f64": np.float64,
+    "f32": np.float32,
+    "f16": np.float16,
+    "bf16": ml_dtypes.bfloat16,
+    "f8e4m3": ml_dtypes.float8_e4m3fn,
+}
+_JNP_DTYPES = {
+    "f64": jnp.float64,
+    "f32": jnp.float32,
+    "f16": jnp.float16,
+    "bf16": jnp.bfloat16,
+    "f8e4m3": jnp.float8_e4m3fn,
+}
+
+
+# --------------------------------------------------------------------------
+# NumPy oracle
+# --------------------------------------------------------------------------
+
+def _np_round(x: np.ndarray, cls_name: str) -> np.ndarray:
+    return x.astype(_NP_DTYPES[cls_name]).astype(x.dtype)
+
+
+def run_schedule_numpy(host_tiles: np.ndarray, sched: Schedule) -> np.ndarray:
+    """Interpret the op stream with NumPy.  Returns the factored tile store."""
+    host = host_tiles.astype(np.float64).copy()
+    tb = sched.tb
+    nslots = max(max(o.slot_c, o.slot_a, o.slot_b) for o in sched.ops) + 1
+    slots = np.zeros((nslots, tb, tb), dtype=np.float64)
+    lad = sched.plan.ladder
+    for op in sched.ops:
+        if op.kind is OpKind.LOAD:
+            slots[op.slot_c] = _np_round(host[op.i, op.j], lad[op.cls])
+        elif op.kind is OpKind.STORE:
+            rounded = _np_round(slots[op.slot_c], lad[op.cls])
+            slots[op.slot_c] = rounded
+            host[op.i, op.j] = rounded
+        elif op.kind is OpKind.SYRK:
+            a = slots[op.slot_a]
+            slots[op.slot_c] = slots[op.slot_c] - a @ a.T
+        elif op.kind is OpKind.GEMM:
+            slots[op.slot_c] = slots[op.slot_c] - slots[op.slot_a] @ slots[op.slot_b].T
+        elif op.kind is OpKind.POTRF:
+            slots[op.slot_c] = np.linalg.cholesky(
+                0.5 * (slots[op.slot_c] + slots[op.slot_c].T))
+        elif op.kind is OpKind.TRSM:
+            import scipy.linalg as sla
+            l = slots[op.slot_a]
+            slots[op.slot_c] = sla.solve_triangular(
+                l, slots[op.slot_c].T, lower=True).T
+        # ALLOC/FREE are bookkeeping-only
+    return host
+
+
+# --------------------------------------------------------------------------
+# JAX executor (single jit, schedule unrolled)
+# --------------------------------------------------------------------------
+
+def _jx_round(x, cls_name, compute_dtype):
+    if _JNP_DTYPES[cls_name] == compute_dtype:
+        return x
+    if cls_name == "f64" and not jax.config.jax_enable_x64:
+        return x  # f64 class degrades to compute dtype when x64 is off
+    return x.astype(_JNP_DTYPES[cls_name]).astype(compute_dtype)
+
+
+def _trsm_jax(l, c):
+    # X L^T = C  =>  L X^T = C^T
+    return jax.scipy.linalg.solve_triangular(l, c.T, lower=True).T
+
+
+def _make_kernel_fns(use_pallas: bool, interpret: bool):
+    if not use_pallas:
+        return {
+            "potrf": lambda c: jnp.linalg.cholesky(0.5 * (c + c.T)),
+            "trsm": _trsm_jax,
+            "syrk": lambda c, a: c - a @ a.T,
+            "gemm": lambda c, a, b: c - a @ b.T,
+        }
+    from repro.kernels import ops as kops
+    return {
+        "potrf": partial(kops.potrf, interpret=interpret),
+        "trsm": partial(kops.trsm, interpret=interpret),
+        "syrk": partial(kops.syrk_update, interpret=interpret),
+        "gemm": partial(kops.gemm_update, interpret=interpret),
+    }
+
+
+def make_jax_executor(sched: Schedule, compute_dtype=jnp.float64,
+                      use_pallas: bool = False, interpret: bool = True):
+    """Build a jit-able ``host_tiles -> factored host_tiles`` function.
+
+    The returned function's HLO contains exactly the transfers of the static
+    schedule; everything else (overlap, async copies) is XLA's job — the
+    deterministic-schedule insight of the paper moved to trace time.
+    """
+    tb = sched.tb
+    lad = sched.plan.ladder
+    nslots = max(max(o.slot_c, o.slot_a, o.slot_b) for o in sched.ops) + 1
+    kf = _make_kernel_fns(use_pallas, interpret)
+
+    def run(host_tiles):
+        host = host_tiles.astype(compute_dtype)
+        slots = jnp.zeros((nslots, tb, tb), dtype=compute_dtype)
+
+        def get(s):
+            return slots[s]
+
+        for op in sched.ops:
+            if op.kind is OpKind.LOAD:
+                t = _jx_round(host[op.i, op.j], lad[op.cls], compute_dtype)
+                slots = slots.at[op.slot_c].set(t)
+            elif op.kind is OpKind.STORE:
+                r = _jx_round(get(op.slot_c), lad[op.cls], compute_dtype)
+                slots = slots.at[op.slot_c].set(r)
+                host = host.at[op.i, op.j].set(r)
+            elif op.kind is OpKind.SYRK:
+                slots = slots.at[op.slot_c].set(kf["syrk"](get(op.slot_c), get(op.slot_a)))
+            elif op.kind is OpKind.GEMM:
+                slots = slots.at[op.slot_c].set(
+                    kf["gemm"](get(op.slot_c), get(op.slot_a), get(op.slot_b)))
+            elif op.kind is OpKind.POTRF:
+                slots = slots.at[op.slot_c].set(kf["potrf"](get(op.slot_c)))
+            elif op.kind is OpKind.TRSM:
+                slots = slots.at[op.slot_c].set(kf["trsm"](get(op.slot_a), get(op.slot_c)))
+        return host
+
+    return run
+
+
+# --------------------------------------------------------------------------
+# Public API
+# --------------------------------------------------------------------------
+
+def plan_for_matrix(a_tiles: np.ndarray, eps_target: float | None,
+                    ladder: str = "tpu") -> PrecisionPlan:
+    nt = a_tiles.shape[0]
+    if eps_target is None:
+        return uniform_plan(nt, "f64", ladder)
+    norms, total = tile_norms(a_tiles)
+    return assign_precision(norms, total, eps_target, ladder)
+
+
+def ooc_cholesky(
+    a: np.ndarray,
+    tb: int,
+    policy: str = "v3",
+    eps_target: float | None = None,
+    ladder: str = "tpu",
+    cache_slots: int = 0,
+    backend: str = "jax",
+    compute_dtype=None,
+    use_pallas: bool = False,
+    block: tuple = (4, 4),
+) -> tuple[np.ndarray, Schedule]:
+    """Out-of-core mixed-precision Cholesky of SPD matrix ``a``.
+
+    Returns (L, schedule) where L is lower-triangular (upper part zeroed)
+    and ``schedule`` carries the exact data-movement record (Fig. 8/12).
+    ``block`` parameterizes the beyond-paper ``policy="v4"`` variant.
+    """
+    layout = TileLayout(a.shape[0], tb)
+    tiles = to_tiles(np.asarray(a, dtype=np.float64), tb)
+    plan = plan_for_matrix(tiles, eps_target, ladder)
+    sched = build_schedule(layout.nt, tb, policy, cache_slots, plan,
+                           block=block)
+    if backend == "numpy":
+        out = run_schedule_numpy(tiles, sched)
+    elif backend == "jax":
+        dt = compute_dtype or (jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+        fn = jax.jit(make_jax_executor(sched, dt, use_pallas=use_pallas))
+        out = np.asarray(fn(jnp.asarray(tiles, dtype=dt)), dtype=np.float64)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    full = from_tiles(out)
+    return np.tril(full), sched

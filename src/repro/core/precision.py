@@ -1,0 +1,113 @@
+"""Per-tile precision assignment (paper §IV-C, following Higham & Mary).
+
+A tile ``A[i, j]`` may be demoted to a lower precision with unit roundoff
+``eps_low`` when
+
+    n_col_tiles * ||A_ij||_F / ||A||_F  <=  eps_target / eps_low
+
+where ``eps_target`` is the requested accuracy level (the paper sweeps
+1e-5 .. 1e-8 in Fig. 10/11) and ``n_col_tiles`` the number of tiles in the
+column block.  Each tile gets the *lowest* precision in the ladder that
+satisfies the inequality; diagonal tiles are pinned to the highest class
+(POTRF stability — they always classify high in practice anyway).
+
+TPU adaptation: the four-precision ladder is FP64/FP32/BF16/FP8-e4m3
+(bf16 replaces fp16 — native on the MXU; see DESIGN.md §2).  The original
+GPU ladder (fp16) is available via ``ladder="gpu"`` for paper-faithful
+accuracy experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Unit roundoffs u = 2^-(t) for each format (t = mantissa bits + 1).
+EPS = {
+    "f64": 2.0 ** -53,
+    "f32": 2.0 ** -24,
+    "f16": 2.0 ** -11,
+    "bf16": 2.0 ** -8,
+    "f8e4m3": 2.0 ** -4,
+}
+
+LADDERS = {
+    # index 0 is highest precision; assignment picks the largest index
+    # (lowest precision) whose eps satisfies the criterion.
+    "tpu": ("f64", "f32", "bf16", "f8e4m3"),
+    "gpu": ("f64", "f32", "f16", "f8e4m3"),
+}
+
+BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """Per-tile precision classes for one factorization."""
+
+    classes: np.ndarray        # [Nt, Nt] int8, class index into `ladder`
+    ladder: tuple[str, ...]    # precision names, high -> low
+    eps_target: float
+
+    @property
+    def nt(self) -> int:
+        return self.classes.shape[0]
+
+    def name(self, i: int, j: int) -> str:
+        return self.ladder[int(self.classes[i, j])]
+
+    def bytes_of(self, i: int, j: int, tb: int) -> int:
+        return BYTES[self.name(i, j)] * tb * tb
+
+    def histogram(self) -> dict[str, int]:
+        out = {name: 0 for name in self.ladder}
+        nt = self.nt
+        for j in range(nt):
+            for i in range(j, nt):
+                out[self.name(i, j)] += 1
+        return out
+
+
+def uniform_plan(nt: int, name: str = "f64", ladder: str = "tpu") -> PrecisionPlan:
+    lad = LADDERS[ladder]
+    cls = np.full((nt, nt), lad.index(name), dtype=np.int8)
+    return PrecisionPlan(cls, lad, eps_target=EPS[name])
+
+
+def assign_precision(
+    tile_norms: np.ndarray,      # [Nt, Nt] Frobenius norms of the tiles
+    matrix_norm: float,          # ||A||_F
+    eps_target: float,
+    ladder: str = "tpu",
+    max_classes: int = 4,
+) -> PrecisionPlan:
+    """Paper Fig. 4: pick per-tile precision from the threshold criterion."""
+    lad = LADDERS[ladder][:max_classes]
+    nt = tile_norms.shape[0]
+    classes = np.zeros((nt, nt), dtype=np.int8)
+    for j in range(nt):
+        n_col = nt - j  # tiles in this column block
+        for i in range(j, nt):
+            if i == j:
+                classes[i, j] = 0  # diagonal pinned high
+                continue
+            ratio = n_col * tile_norms[i, j] / max(matrix_norm, np.finfo(np.float64).tiny)
+            chosen = 0
+            for c in range(len(lad) - 1, 0, -1):
+                if ratio <= eps_target / EPS[lad[c]]:
+                    chosen = c
+                    break
+            classes[i, j] = chosen
+    return PrecisionPlan(classes, LADDERS[ladder][:max_classes], eps_target)
+
+
+def tile_norms(tiles: np.ndarray) -> tuple[np.ndarray, float]:
+    """Frobenius norms per tile + whole-matrix norm from a [Nt,Nt,tb,tb] store."""
+    norms = np.sqrt((tiles.astype(np.float64) ** 2).sum(axis=(2, 3)))
+    nt = norms.shape[0]
+    total = 0.0
+    for j in range(nt):
+        for i in range(j, nt):
+            w = 1.0 if i == j else 2.0  # symmetric: off-diag tiles count twice
+            total += w * norms[i, j] ** 2
+    return norms, float(np.sqrt(total))

@@ -1,0 +1,438 @@
+"""Static task schedule for the left-looking tile Cholesky (Algorithms 1-3).
+
+The paper's static scheduler assigns tasks ahead of time and consults a
+runtime *cache table* (Algorithm 3) to decide whether a tile must be copied
+host->device.  Because the schedule is deterministic, the entire cache
+behaviour — every hit, miss, and eviction — is computable *before* execution.
+
+This module replays Algorithms 1+2+3 in Python and emits a flat list of
+:class:`Op` records (LOAD / compute / STORE).  The emitted program contains
+exactly the transfers the paper's runtime would perform; executors
+(``cholesky.py``) simply trace it, and ``analytics.py`` folds it into the
+byte-volume numbers of Fig. 8 / Fig. 12.
+
+Policies (paper §IV-A/B):
+  * ``sync`` / ``async`` — naive OOC: every task loads its operands and
+    stores its output.  (``async`` differs at runtime by multi-stream
+    overlap and per-tile malloc/free; the op stream is identical, the
+    allocation events are counted for the analytics.)
+  * ``v1``  — the accumulator tile C of ``C = -A @ B.T + C`` is loaded once
+    per update sweep and stored once when it reaches its final state.
+  * ``v2``  — V1 + operand cache table: GEMM/SYRK/TRSM operands already on
+    the device are reused; least-recently-used unpinned slots are repurposed
+    when the device memory budget is exhausted.
+  * ``v3``  — V2 + the column's diagonal tile is pinned until every TRSM of
+    that column block has consumed it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from .precision import PrecisionPlan, BYTES, uniform_plan
+
+
+class OpKind(enum.Enum):
+    LOAD = "load"        # host tile (i,j) -> device slot (cast to tile class)
+    STORE = "store"      # device slot -> host tile (i,j) (cast to tile class)
+    SYRK = "syrk"        # C[slot_c] += -A[slot_a] @ A[slot_a].T
+    GEMM = "gemm"        # C[slot_c] += -A[slot_a] @ B[slot_b].T
+    POTRF = "potrf"      # C[slot_c] = chol(C[slot_c])
+    TRSM = "trsm"        # C[slot_c] = C[slot_c] @ inv(L[slot_a]).T
+    ALLOC = "alloc"      # async policy only: per-tile cudaMalloc analogue
+    FREE = "free"
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    kind: OpKind
+    i: int = -1              # tile row (LOAD/STORE target tile)
+    j: int = -1              # tile col
+    slot_c: int = -1         # destination / accumulator slot
+    slot_a: int = -1         # first operand slot
+    slot_b: int = -1         # second operand slot
+    cls: int = 0             # precision class (index into plan.ladder)
+    bytes: int = 0           # transfer bytes (LOAD/STORE only)
+    k: int = -1              # column step this op belongs to (for tracing)
+
+
+@dataclasses.dataclass
+class Schedule:
+    ops: list[Op]
+    nt: int
+    tb: int
+    policy: str
+    cache_slots: int
+    plan: PrecisionPlan
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    def loads_bytes(self) -> int:
+        return sum(o.bytes for o in self.ops if o.kind is OpKind.LOAD)
+
+    def stores_bytes(self) -> int:
+        return sum(o.bytes for o in self.ops if o.kind is OpKind.STORE)
+
+    def flops(self) -> float:
+        """Model FLOPs of the factorization: n^3/3 for the full matrix."""
+        n = self.nt * self.tb
+        return n**3 / 3.0
+
+    def count(self, kind: OpKind) -> int:
+        return sum(1 for o in self.ops if o.kind is kind)
+
+
+class _CacheTable:
+    """Trace-time replay of Algorithm 3 (load_tile with cache table).
+
+    O(1) amortized per access: free slots on a stack, LRU order in an
+    OrderedDict (linear scans made 100k-tile schedules untraceable)."""
+
+    def __init__(self, slots: int, emit, plan: PrecisionPlan, tb: int):
+        import collections
+        self.slots = slots
+        self.emit = emit
+        self.plan = plan
+        self.tb = tb
+        self.where: dict[tuple[int, int], int] = {}   # tile -> slot
+        self.resident: list[Optional[tuple[int, int]]] = [None] * slots
+        self.pinned: set[int] = set()
+        self.free: list[int] = list(range(slots - 1, -1, -1))
+        self.lru = collections.OrderedDict()          # slot -> None, LRU first
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def _touch(self, s: int):
+        self.lru[s] = None
+        self.lru.move_to_end(s)
+
+    def _victim(self) -> int:
+        while self.free:
+            s = self.free.pop()
+            if self.resident[s] is None:
+                return s
+        for s in self.lru:
+            if s not in self.pinned:
+                return s
+        raise RuntimeError(
+            f"cache thrash: all {self.slots} slots pinned; "
+            "increase cache_slots"
+        )
+
+    def lookup(self, i: int, j: int) -> Optional[int]:
+        return self.where.get((i, j))
+
+    def load(self, i: int, j: int, k: int, pin: bool = False,
+             cacheable: bool = True) -> int:
+        """Algorithm 3: return a slot holding tile (i, j), loading on miss."""
+        s = self.where.get((i, j))
+        if s is not None:
+            self.hits += 1
+            self._touch(s)
+            if pin:
+                self.pinned.add(s)
+            return s
+        self.misses += 1
+        s = self._victim()
+        if self.resident[s] is not None:
+            self.evictions += 1
+            del self.where[self.resident[s]]
+            self.lru.pop(s, None)
+        cls = int(self.plan.classes[i, j])
+        nbytes = BYTES[self.plan.ladder[cls]] * self.tb * self.tb
+        self.emit(Op(OpKind.LOAD, i=i, j=j, slot_c=s, cls=cls, bytes=nbytes, k=k))
+        if cacheable:
+            self.resident[s] = (i, j)
+            self.where[(i, j)] = s
+        self._touch(s)
+        if pin:
+            self.pinned.add(s)
+        return s
+
+    def adopt(self, i: int, j: int, s: int, pin: bool = False):
+        """Register a tile produced on-device (e.g. fresh L[k,k]) in slot s."""
+        if self.resident[s] is not None and self.resident[s] != (i, j):
+            self.where.pop(self.resident[s], None)
+        self.resident[s] = (i, j)
+        self.where[(i, j)] = s
+        self._touch(s)
+        if pin:
+            self.pinned.add(s)
+
+    def unpin(self, s: int):
+        self.pinned.discard(s)
+
+    def invalidate(self, i: int, j: int):
+        s = self.where.pop((i, j), None)
+        if s is not None:
+            self.resident[s] = None
+            self.pinned.discard(s)
+            self.lru.pop(s, None)
+            self.free.append(s)
+
+
+def build_schedule(
+    nt: int,
+    tb: int,
+    policy: str = "v3",
+    cache_slots: int = 0,
+    plan: PrecisionPlan | None = None,
+    block: tuple = (4, 4),
+) -> Schedule:
+    """Emit the static op stream for one left-looking tile Cholesky.
+
+    ``v4`` is the beyond-paper 2D-blocked left-looking variant (see
+    :func:`_build_v4`); ``block=(h, w)`` are its row/column block sizes.
+    """
+    policy = policy.lower()
+    if policy not in ("sync", "async", "v1", "v2", "v3", "v4"):
+        raise ValueError(f"unknown policy {policy!r}")
+    if plan is None:
+        plan = uniform_plan(nt)
+    if plan.classes.shape[0] != nt:
+        raise ValueError("precision plan Nt mismatch")
+    if policy == "v4":
+        return _build_v4(nt, tb, plan, cache_slots, block)
+    if cache_slots <= 0:
+        cache_slots = max(4, min(nt * 2 + 2, 2 * nt + 4))
+
+    ops: list[Op] = []
+    emit = ops.append
+
+    def ccls(*tiles: tuple[int, int]) -> int:
+        """Compute class of a task = lowest precision among its operands
+        (tensor-core engines run at the rate of the narrowest operand)."""
+        return max(int(plan.classes[i, j]) for i, j in tiles)
+    operand_cache = policy in ("v2", "v3")
+    reuse_accum = policy in ("v1", "v2", "v3")
+    pin_diag = policy == "v3"
+    per_task_alloc = policy == "async"
+
+    cache = _CacheTable(cache_slots, emit, plan, tb)
+
+    def store(i, j, s, k):
+        cls = int(plan.classes[i, j])
+        emit(Op(OpKind.STORE, i=i, j=j, slot_c=s, cls=cls,
+                bytes=BYTES[plan.ladder[cls]] * tb * tb, k=k))
+
+    def naive_load(i, j, k, slot):
+        """sync/async path: unconditional transfer into a fixed slot."""
+        cls = int(plan.classes[i, j])
+        if per_task_alloc:
+            emit(Op(OpKind.ALLOC, i=i, j=j, slot_c=slot, k=k))
+        emit(Op(OpKind.LOAD, i=i, j=j, slot_c=slot, cls=cls,
+                bytes=BYTES[plan.ladder[cls]] * tb * tb, k=k))
+        return slot
+
+    if not reuse_accum:
+        # ---- sync / async: no cache table, fixed slots 0=C, 1=A, 2=B ----
+        for k in range(nt):
+            # diagonal tile
+            for n in range(k):
+                c = naive_load(k, k, k, 0)
+                a = naive_load(k, n, k, 1)
+                emit(Op(OpKind.SYRK, slot_c=c, slot_a=a, k=k, cls=ccls((k, n))))
+                store(k, k, c, k)
+                if per_task_alloc:
+                    emit(Op(OpKind.FREE, slot_c=1, k=k))
+            c = naive_load(k, k, k, 0)
+            emit(Op(OpKind.POTRF, slot_c=c, k=k, cls=ccls((k, k))))
+            store(k, k, c, k)
+            # off-diagonal tiles of column k
+            for m in range(k + 1, nt):
+                for n in range(k):
+                    c = naive_load(m, k, k, 0)
+                    a = naive_load(m, n, k, 1)
+                    b = naive_load(k, n, k, 2)
+                    emit(Op(OpKind.GEMM, slot_c=c, slot_a=a, slot_b=b, k=k, cls=ccls((m, n), (k, n))))
+                    store(m, k, c, k)
+                    if per_task_alloc:
+                        emit(Op(OpKind.FREE, slot_c=1, k=k))
+                        emit(Op(OpKind.FREE, slot_c=2, k=k))
+                c = naive_load(m, k, k, 0)
+                d = naive_load(k, k, k, 1)
+                emit(Op(OpKind.TRSM, slot_c=c, slot_a=d, k=k, cls=ccls((k, k), (m, k))))
+                store(m, k, c, k)
+                if per_task_alloc:
+                    emit(Op(OpKind.FREE, slot_c=0, k=k))
+                    emit(Op(OpKind.FREE, slot_c=1, k=k))
+        sched = Schedule(ops, nt, tb, policy, cache_slots, plan)
+        sched.misses = sched.count(OpKind.LOAD)
+        return sched
+
+    if not operand_cache:
+        # ---- V1: accumulator reuse only, no cache table ----
+        # Fixed slots: 0 = accumulator C, 1 = operand A, 2 = operand B,
+        # 3 = diagonal for TRSM.  Every operand access transfers.
+        for k in range(nt):
+            c = naive_load(k, k, k, 0)       # accumulator: loaded ONCE
+            for n in range(k):
+                a = naive_load(k, n, k, 1)
+                emit(Op(OpKind.SYRK, slot_c=c, slot_a=a, k=k, cls=ccls((k, n))))
+            emit(Op(OpKind.POTRF, slot_c=c, k=k, cls=ccls((k, k))))
+            store(k, k, c, k)                # stored ONCE, in final state
+            for m in range(k + 1, nt):
+                c = naive_load(m, k, k, 0)
+                for n in range(k):
+                    a = naive_load(m, n, k, 1)
+                    b = naive_load(k, n, k, 2)
+                    emit(Op(OpKind.GEMM, slot_c=c, slot_a=a, slot_b=b, k=k, cls=ccls((m, n), (k, n))))
+                d = naive_load(k, k, k, 3)   # V1: diagonal reloaded per TRSM
+                emit(Op(OpKind.TRSM, slot_c=c, slot_a=d, k=k, cls=ccls((k, k), (m, k))))
+                store(m, k, c, k)
+        sched = Schedule(ops, nt, tb, policy, cache_slots, plan)
+        sched.misses = sched.count(OpKind.LOAD)
+        return sched
+
+    # ---- V2/V3: accumulator reuse + cache table for operands ----
+    for k in range(nt):
+        # --- diagonal tile A[k,k]: SYRK sweep then POTRF ---
+        c = cache.load(k, k, k, pin=True)
+        for n in range(k):
+            a = cache.load(k, n, k, pin=True)
+            emit(Op(OpKind.SYRK, slot_c=c, slot_a=a, k=k, cls=ccls((k, n))))
+            cache.unpin(a)
+        emit(Op(OpKind.POTRF, slot_c=c, k=k, cls=ccls((k, k))))
+        store(k, k, c, k)
+        # the fresh diagonal factor stays registered; V3 pins it for the
+        # whole column block (paper Fig. 3c)
+        cache.unpin(c)
+        cache.adopt(k, k, c, pin=pin_diag)
+        diag_slot = c
+
+        # --- off-diagonal tiles A[m,k]: GEMM sweep then TRSM ---
+        for m in range(k + 1, nt):
+            c = cache.load(m, k, k, pin=True)
+            for n in range(k):
+                a = cache.load(m, n, k, pin=True)
+                b = cache.load(k, n, k, pin=True)
+                emit(Op(OpKind.GEMM, slot_c=c, slot_a=a, slot_b=b, k=k, cls=ccls((m, n), (k, n))))
+                cache.unpin(a)
+                cache.unpin(b)
+            d = cache.load(k, k, k, pin=True)
+            emit(Op(OpKind.TRSM, slot_c=c, slot_a=d, k=k, cls=ccls((k, k), (m, k))))
+            if not pin_diag:
+                cache.unpin(d)
+            store(m, k, c, k)
+            cache.adopt(m, k, c)   # factored tile stays reusable (V2/V3)
+            cache.unpin(c)
+        if pin_diag:
+            cache.unpin(diag_slot)
+
+    sched = Schedule(ops, nt, tb, policy, cache_slots, plan,
+                     hits=cache.hits, misses=cache.misses,
+                     evictions=cache.evictions)
+    return sched
+
+
+def _build_v4(nt: int, tb: int, plan: PrecisionPlan, cache_slots: int,
+              block: tuple) -> Schedule:
+    """Beyond-paper V4: 2D-blocked left-looking schedule.
+
+    The paper's V1-V3 stream operands per GEMM: even with a perfect
+    cache, the external-update sweep loads ~1 tile per GEMM once the
+    working set exceeds the cache.  Blocking the update into (h rows x w
+    panel columns) amortizes each loaded operand over h*w GEMMs:
+    loads/GEMM ~ (h+w)/(h*w) ~ 2/w — the classic surface-to-volume
+    trade, applied to the host-device link instead of a cache line.
+
+    Structure per panel [k0, k0+w):
+      phase 1 — external updates (n < k0) for all panel tiles, 2D-blocked;
+                partially-updated accumulators are stored back (one extra
+                triangular G2C pass vs V3 — cheap next to the C2G win);
+      phase 2 — internal left-looking factorization of the w panel
+                columns (operands are panel-resident).
+    """
+    h, w = block
+    if cache_slots <= 0:
+        cache_slots = h * w + h + w + 4
+    if cache_slots < h * w + w + 2:
+        raise ValueError(
+            f"v4 needs >= h*w + w + 2 = {h*w+w+2} slots, got {cache_slots}")
+
+    ops: list[Op] = []
+    emit = ops.append
+    cache = _CacheTable(cache_slots, emit, plan, tb)
+
+    def ccls(*tiles):
+        return max(int(plan.classes[i, j]) for i, j in tiles)
+
+    def store(i, j, s, k):
+        cls = int(plan.classes[i, j])
+        emit(Op(OpKind.STORE, i=i, j=j, slot_c=s, cls=cls,
+                bytes=BYTES[plan.ladder[cls]] * tb * tb, k=k))
+
+    for k0 in range(0, nt, w):
+        k1 = min(k0 + w, nt)
+        cols = list(range(k0, k1))
+
+        # ---- phase 1: external updates, blocked (h rows x w cols) ----
+        if k0 > 0:
+            for m0 in range(k0, nt, h):
+                rows = list(range(m0, min(m0 + h, nt)))
+                accs = {}
+                for m in rows:
+                    for j in cols:
+                        if j <= m:
+                            accs[(m, j)] = cache.load(m, j, k0, pin=True)
+                for n in range(k0):
+                    bslots = {j: cache.load(j, n, k0, pin=True)
+                              for j in cols}
+                    for m in rows:
+                        a = cache.load(m, n, k0, pin=True)
+                        for j in cols:
+                            if j > m:
+                                continue
+                            if m == j:
+                                emit(Op(OpKind.SYRK, slot_c=accs[(m, j)],
+                                        slot_a=a, k=k0, cls=ccls((m, n))))
+                            else:
+                                emit(Op(OpKind.GEMM, slot_c=accs[(m, j)],
+                                        slot_a=a, slot_b=bslots[j], k=k0,
+                                        cls=ccls((m, n), (j, n))))
+                        cache.unpin(a)
+                    for j in cols:
+                        cache.unpin(bslots[j])
+                # write partially-updated tiles back; host stays coherent
+                for (m, j), s in accs.items():
+                    store(m, j, s, k0)
+                    cache.unpin(s)
+
+        # ---- phase 2: internal panel factorization ----
+        for j in cols:
+            c = cache.load(j, j, j, pin=True)
+            for n in range(k0, j):
+                a = cache.load(j, n, j, pin=True)
+                emit(Op(OpKind.SYRK, slot_c=c, slot_a=a, k=j,
+                        cls=ccls((j, n))))
+                cache.unpin(a)
+            emit(Op(OpKind.POTRF, slot_c=c, k=j, cls=ccls((j, j))))
+            store(j, j, c, j)
+            cache.unpin(c)
+            cache.adopt(j, j, c, pin=True)
+            diag = c
+            for m in range(j + 1, nt):
+                c2 = cache.load(m, j, j, pin=True)
+                for n in range(k0, j):
+                    a = cache.load(m, n, j, pin=True)
+                    b = cache.load(j, n, j, pin=True)
+                    emit(Op(OpKind.GEMM, slot_c=c2, slot_a=a, slot_b=b,
+                            k=j, cls=ccls((m, n), (j, n))))
+                    cache.unpin(a)
+                    cache.unpin(b)
+                d = cache.load(j, j, j, pin=True)
+                emit(Op(OpKind.TRSM, slot_c=c2, slot_a=d, k=j,
+                        cls=ccls((j, j), (m, j))))
+                if d != diag:
+                    cache.unpin(d)
+                store(m, j, c2, j)
+                cache.adopt(m, j, c2)
+                cache.unpin(c2)
+            cache.unpin(diag)
+
+    return Schedule(ops, nt, tb, "v4", cache_slots, plan,
+                    hits=cache.hits, misses=cache.misses,
+                    evictions=cache.evictions)

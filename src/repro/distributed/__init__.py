@@ -1,0 +1,4 @@
+from .sharding import (LOGICAL_RULES, partition_spec, params_shardings,
+                       batch_spec)
+
+__all__ = ["LOGICAL_RULES", "partition_spec", "params_shardings", "batch_spec"]

@@ -1,0 +1,231 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates every parameter dimension with a *logical* axis name
+(see models/layers.py); this module maps logical names to mesh axes.  One
+rule table serves every architecture; configs may override entries.
+
+Default mapping on the production mesh ("pod", "data", "model"):
+
+  embed  -> "data"    FSDP: parameters/optimizer state sharded over DP ranks
+  vocab  -> "model"   TP: embedding + logits sharded over tensor ranks
+  heads  -> "model"   TP over attention heads
+  kv     -> "model"   TP over kv heads (falls back to replicated if indivisible)
+  mlp    -> "model"   TP over FFN hidden
+  inner  -> "model"   TP over SSM inner dim
+  expert -> "model"   EP: experts over tensor ranks
+  lora   -> None      MLA compressed streams are small; replicate
+  stack  -> None      scan axis, never sharded
+
+The "pod" axis extends data parallelism across pods (DP hierarchy:
+gradient all-reduce inside a pod first, then across pods over DCN).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_RULES: dict = {
+    "embed": "data",
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "inner": "model",
+    "expert": "model",
+    "lora": None,
+    "conv": None,
+    "stack": None,
+    None: None,
+}
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def partition_spec(axes: tuple, shape: tuple, mesh: Mesh,
+                   rules: dict | None = None) -> P:
+    """Map one parameter's logical axes -> PartitionSpec, dropping any mesh
+    axis that does not divide the corresponding dimension (e.g. kv=1 heads
+    on a 16-way tensor mesh -> replicated)."""
+    rules = rules or LOGICAL_RULES
+    sizes = _mesh_axis_sizes(mesh)
+    used = set()
+    out = []
+    for ax_name, dim in zip(axes, shape):
+        mesh_ax = rules.get(ax_name)
+        if mesh_ax is None or mesh_ax in used or mesh_ax not in sizes:
+            out.append(None)
+            continue
+        if dim % sizes[mesh_ax] != 0:
+            out.append(None)
+            continue
+        out.append(mesh_ax)
+        used.add(mesh_ax)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def params_shardings(axes_tree, params_tree, mesh: Mesh,
+                     rules: dict | None = None):
+    """NamedSharding tree matching a params tree."""
+    def one(ax, p):
+        spec = partition_spec(tuple(ax), p.shape, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, axes_tree, params_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_spec(mesh: Mesh, seq_sharded: bool = False) -> P:
+    """Spec for [batch, seq, ...] activations: batch over DP axes (pod+data);
+    optionally shard the sequence dim over "data" (SP, long-context)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp[0] if len(dp) == 1 else dp
+    if seq_sharded:
+        return P(None, "data")
+    return P(dp)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (trace-time, context-scoped)
+#
+# XLA's sharding propagation can replicate large intermediates (e.g. the
+# [B,S,V] logits) when the forward graph gives it freedom; these explicit
+# anchors pin the standard layout: batch over DP, vocab/experts over
+# "model".  Model code calls ``shard_act`` unconditionally; outside an
+# ``activation_sharding`` context (tests, CPU CI) it is the identity.
+
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding", default=None)
+
+
+def residual_barrier(x):
+    """Optional bf16 pin on the residual stream.
+
+    XLA (CPU pipeline, at least) hoists the bf16->f32 convert feeding the
+    next rms_norm ABOVE the tensor-parallel all-reduce of the block
+    output, doubling every TP collective.  An optimization barrier after
+    the residual add keeps the all-reduce in bf16.  Enabled via
+    activation_sharding(bf16_all_reduce=True).
+    """
+    ctx = _ACT_CTX.get()
+    if ctx is None or not ctx.get("bf16_ar"):
+        return x
+    return jax.lax.optimization_barrier(x)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, seq_sharded: bool = False,
+                        attn_seq_parallel: bool = False,
+                        residual_seq_parallel: bool = False,
+                        bf16_all_reduce: bool = False):
+    """attn_seq_parallel: shard the *query sequence* of attention over the
+    "model" axis (context parallelism).  Rescues tensor parallelism when
+    the head count does not divide the TP degree (qwen3 40H, llava 56H,
+    gemma3 4H on a 16-way axis): without it attention replicates 16x.
+
+    residual_seq_parallel: Megatron-style SP — the residual stream
+    [B,S,D] is sharded (DP, "model", -) between blocks, so the remat
+    stack and norm traffic shrink by the TP degree and the TP pair
+    all-reduces become reduce-scatter + all-gather."""
+    tok = _ACT_CTX.set({"mesh": mesh, "seq": seq_sharded,
+                        "attn_sp": attn_seq_parallel,
+                        "sp": residual_seq_parallel,
+                        "bf16_ar": bf16_all_reduce})
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(tok)
+
+
+def _div(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return False
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        if a not in mesh.axis_names:
+            return False
+        size *= mesh.shape[a]
+    return dim % size == 0
+
+
+def moe_group_count(tokens: int) -> int:
+    """Number of dispatch groups for the grouped MoE: one per "data" rank
+    (each group's sort/capacity/scatter is then shard-local — without
+    this the global argsort forces XLA to all-reduce the full [E,C,d]
+    buffer per layer).  1 outside a mesh context / when indivisible.
+    REPRO_MOE_GROUPS=1 forces the paper-baseline global dispatch."""
+    import os
+    forced = os.environ.get("REPRO_MOE_GROUPS")
+    if forced:
+        g = int(forced)
+        return g if tokens % g == 0 else 1
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return 1
+    g = ctx["mesh"].shape.get("data", 1)
+    return g if tokens % g == 0 else 1
+
+
+def shard_act(x, kind: str):
+    """Constraint for a standard activation layout; identity outside ctx.
+
+    kinds: "hidden" [B,S,D] - batch over DP (seq over "data" if seq_sharded)
+           "logits" [B,S,V] - batch over DP, vocab over "model"
+           "moe"    [E,C,D] - experts over "model" (EP), capacity over "data"
+           "moe_tokens"/"moe_buf" - grouped dispatch (see moe_group_count)
+           "attn_q" [B,S,H,hd] - context-parallel queries (opt-in)
+    """
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return x
+    mesh: Mesh = ctx["mesh"]
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp[0] if len(dp) == 1 else dp
+    if kind == "hidden":
+        if ctx["seq"] and _div(x.shape[1], mesh, "data"):
+            spec = P("pod" if _div(x.shape[0], mesh, "pod") else None,
+                     "data", None)
+        elif ctx.get("sp") and _div(x.shape[1], mesh, "model"):
+            spec = P(dp if _div(x.shape[0], mesh, dp) else None,
+                     "model", None)
+        else:
+            spec = P(dp if _div(x.shape[0], mesh, dp) else None, None, None)
+    elif kind == "logits":
+        spec = P(dp if _div(x.shape[0], mesh, dp) else None, None,
+                 "model" if _div(x.shape[-1], mesh, "model") else None)
+    elif kind == "moe":
+        spec = P("model" if _div(x.shape[0], mesh, "model") else None,
+                 "data" if _div(x.shape[1], mesh, "data") else None, None)
+    elif kind == "moe_tokens":       # [G, T_local, d] grouped token stream
+        spec = P("data" if _div(x.shape[0], mesh, "data") else None,
+                 None, None)
+    elif kind == "moe_buf":          # [G, E, C, d] grouped expert buffer
+        spec = P("data" if _div(x.shape[0], mesh, "data") else None,
+                 "model" if _div(x.shape[1], mesh, "model") else None,
+                 None, None)
+    elif kind == "attn_q":
+        # [B, S, H, hd] query block: batch over DP, seq over "model" (SP)
+        if not ctx.get("attn_sp") or not _div(x.shape[1], mesh, "model"):
+            return x
+        spec = P(dp if _div(x.shape[0], mesh, dp) else None, "model",
+                 None, None)
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def cache_spec(mesh: Mesh, batch: int, seq_sharded: bool) -> P:
+    """KV-cache spec: [B, S, kv, hd]. decode_32k shards batch over DP;
+    long_500k (B=1) shards the sequence over "data" instead (flash-decode
+    style merged partial attention is inserted by SPMD)."""
+    if seq_sharded:
+        return P(None, "data", "model")
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp[0] if len(dp) == 1 else dp
+    return P(dp, None, "model")

@@ -1,0 +1,28 @@
+"""Gaussian log-likelihood through the (MxP OOC) Cholesky factor (Eq. 1).
+
+ℓ(θ; y) = −n/2 log 2π − ½ log|Σ| − ½ yᵀ Σ⁻¹ y
+
+log|Σ| = 2 Σ_i log L_ii and yᵀΣ⁻¹y = ‖L⁻¹y‖² via one triangular solve.
+The factor comes from any policy/precision of ``repro.core`` — this module
+is precision-agnostic and is what the KL-divergence assessment drives.
+"""
+from __future__ import annotations
+
+import numpy as np
+import scipy.linalg as sla
+
+
+def loglik_terms_from_factor(l: np.ndarray, y: np.ndarray | None = None):
+    """(logdet, quad) from a lower Cholesky factor (NaN-safe logdet)."""
+    diag = np.diag(l)
+    logdet = 2.0 * np.sum(np.log(diag))
+    if y is None:
+        return logdet, 0.0
+    z = sla.solve_triangular(l, y, lower=True)
+    return logdet, float(z @ z)
+
+
+def gaussian_loglik(l: np.ndarray, y: np.ndarray | None = None) -> float:
+    n = l.shape[0]
+    logdet, quad = loglik_terms_from_factor(l, y)
+    return float(-0.5 * n * np.log(2.0 * np.pi) - 0.5 * logdet - 0.5 * quad)

@@ -1,0 +1,51 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+Dispatch rule (DESIGN.md §2): f64 tiles take the stock XLA path (the TPU
+has no native f64 MXU); f32/bf16/fp8 tiles take the Pallas kernels.  On
+CPU CI every kernel runs in interpret mode, which executes the kernel body
+through XLA and validates the BlockSpec pipeline end to end.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .potrf import potrf as _potrf_pallas
+from .trsm import trsm as _trsm_pallas
+from .syrk import syrk_update as _syrk_pallas
+from .mxp_gemm import mxp_gemm_update as _gemm_pallas
+
+_F64 = (jnp.float64,)
+
+
+def _is_f64(*xs) -> bool:
+    return any(x.dtype in _F64 for x in xs)
+
+
+def potrf(a, interpret: bool = True):
+    if _is_f64(a):
+        return _ref.potrf_ref(a)
+    return _potrf_pallas(a, interpret=interpret)
+
+
+def trsm(l, c, interpret: bool = True):
+    if _is_f64(l, c):
+        return _ref.trsm_ref(l, c)
+    return _trsm_pallas(l, c, interpret=interpret)
+
+
+def syrk_update(c, a, interpret: bool = True):
+    if _is_f64(c, a):
+        return _ref.syrk_update_ref(c, a)
+    out = _syrk_pallas(c, a, interpret=interpret)
+    # mirror the lower triangle (kernel skips strictly-upper blocks)
+    return jnp.tril(out) + jnp.tril(out, -1).T
+
+
+def gemm_update(c, a, b, interpret: bool = True):
+    if _is_f64(c, a, b):
+        return _ref.gemm_update_ref(c, a, b)
+    return _gemm_pallas(c, a, b, interpret=interpret)
+
+
+mxp_gemm_update = gemm_update

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: single-tile Cholesky factorization (POTRF).
+
+The whole tile lives in VMEM (one grid cell — a Cholesky tile is at most
+256x256xf32 = 256 KiB, far under the ~16 MiB VMEM budget).  The kernel runs
+the column-recursive algorithm: column ``j`` is formed with one masked
+matvec against the already-factored panel, which the Mosaic compiler maps
+to VPU lanes; the O(n^2) matvec per column is dominated by the O(n^3) SYRK/
+GEMM traffic that surrounds POTRF in the factorization (surface-to-volume,
+paper §I), so MXU-blocking the interior of POTRF is deliberately not done.
+
+dtypes: f32/bf16 storage, f32 compute.  (f64 tiles take the stock XLA path
+— the TPU has no native f64 MXU; see DESIGN.md §2.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _potrf_kernel(a_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)
+    a = 0.5 * (a + a.T)
+    n = a.shape[0]
+    rows = jax.lax.iota(jnp.int32, n)
+
+    def col(j, l):
+        # v = A[:, j] - L @ L[j, :]^T ; columns >= j of L are still zero.
+        v = a[:, j] - l @ l[j, :]
+        d = jnp.sqrt(v[j])
+        colv = jnp.where(rows >= j, v / d, jnp.zeros_like(v))
+        return l.at[:, j].set(colv)
+
+    l = jax.lax.fori_loop(0, n, col, jnp.zeros_like(a))
+    o_ref[...] = l.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def potrf(a: jax.Array, interpret: bool = True) -> jax.Array:
+    n = a.shape[0]
+    return pl.pallas_call(
+        _potrf_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        in_specs=[pl.BlockSpec((n, n), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((n, n), lambda: (0, 0)),
+        interpret=interpret,
+    )(a)

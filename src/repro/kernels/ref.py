@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests ``assert_allclose`` against
+(interpret mode on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def potrf_ref(a: jax.Array) -> jax.Array:
+    """Lower Cholesky factor of a (symmetrized) SPD tile."""
+    return jnp.linalg.cholesky(0.5 * (a + a.T))
+
+
+def trsm_ref(l: jax.Array, c: jax.Array) -> jax.Array:
+    """Solve X @ L^T = C for X (right-solve against the transposed factor)."""
+    return jax.scipy.linalg.solve_triangular(l, c.T, lower=True).T
+
+
+def syrk_update_ref(c: jax.Array, a: jax.Array) -> jax.Array:
+    """C - A @ A^T (the left-looking diagonal update)."""
+    return c - a @ a.T
+
+
+def gemm_update_ref(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """C - A @ B^T (the left-looking off-diagonal update)."""
+    return c - a @ b.T
+
+
+def mxp_gemm_ref(c: jax.Array, a: jax.Array, b: jax.Array,
+                 acc_dtype=jnp.float32) -> jax.Array:
+    """Mixed-precision C - A @ B^T: low-precision operands, wide accumulate.
+
+    Operands keep their storage dtype (fp8/bf16/f32); products accumulate
+    in ``acc_dtype``; result is cast back to C's dtype.
+    """
+    prod = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=acc_dtype)
+    return (c.astype(acc_dtype) - prod).astype(c.dtype)

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: triangular solve X @ L^T = C (TRSM, right/lower-T).
+
+One grid cell per C-row-panel: L (tb x tb) is broadcast to every cell, the
+C panel streams through VMEM in ``bm``-row blocks so arbitrarily tall C
+panels (the paper's column block of TRSMs, Fig. 3c) stay within the VMEM
+budget.  Columns are produced by forward substitution; each step is one
+masked matvec over the already-solved panel (VPU), the panel itself sits
+in registers/VMEM the whole time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _trsm_kernel(l_ref, c_ref, o_ref):
+    l = l_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    n = l.shape[0]
+
+    def col(j, x):
+        # X[:, j] = (C[:, j] - X @ L[j, :]^T) / L[j, j]
+        v = (c[:, j] - x @ l[j, :]) / l[j, j]
+        return x.at[:, j].set(v)
+
+    x = jax.lax.fori_loop(0, n, col, jnp.zeros_like(c))
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def trsm(l: jax.Array, c: jax.Array, bm: int | None = None,
+         interpret: bool = True) -> jax.Array:
+    """Solve X L^T = C.  l: [n, n] lower-triangular; c: [m, n]."""
+    m, n = c.shape
+    bm = bm or m
+    assert m % bm == 0, (m, bm)
+    return pl.pallas_call(
+        _trsm_kernel,
+        grid=(m // bm,),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),      # L broadcast
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),     # C row panel
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        interpret=interpret,
+    )(l, c)

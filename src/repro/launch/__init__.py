@@ -1,0 +1,2 @@
+"""Launcher: production mesh, abstract input specs, train/serve steps,
+multi-pod dry-run and roofline derivation."""

@@ -1,0 +1,312 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host
+placeholder devices back the production meshes; ``.lower().compile()``
+must succeed and yields ``memory_analysis()`` / ``cost_analysis()`` plus
+the collective schedule for EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all          # every cell, subprocess each
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# isort: split
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, shapes_for
+from repro.distributed.sharding import activation_sharding
+from repro.launch import hlo as hlo_mod
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _sharded_bytes(tree, shardings) -> int:
+    """Analytic per-device bytes of a sharded pytree."""
+    total = 0
+    for leaf, sh in zip(
+            jax.tree.leaves(tree),
+            jax.tree.leaves(shardings,
+                            is_leaf=lambda x: isinstance(x, NamedSharding))):
+        n = leaf.dtype.itemsize
+        for d in leaf.shape:
+            n *= d
+        spec = sh.spec
+        div = 1
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            for a in axes:
+                div *= sh.mesh.shape[a]
+        total += n // div
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               accum_steps: int = 1, opts: dict | None = None):
+    """Build + lower + compile one cell; return the result record."""
+    opts = opts or {}
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic():
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "full-attention arch; long_500k needs sub-quadratic"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    quantized_opt = bool(opts.get("q8opt", False))
+    params_abs, p_sh, opt_abs, opt_sh = S.train_state_shardings(
+        cfg, mesh, quantized_opt=quantized_opt)
+    batch_abs = S.input_specs(cfg, shape)
+    batch_sh = S.batch_shardings(cfg, shape, mesh)
+    rep = NamedSharding(mesh, P())
+
+    seq_sharded_acts = bool(opts.get("seq_sharded", shape.name == "long_500k"))
+    # context-parallel attention by default when the head count does not
+    # divide the TP degree (otherwise attention replicates TP-fold);
+    # §Perf iteration 1 on qwen3 — measured 8.4x
+    auto_attn_sp = (cfg.num_heads % mesh.shape["model"] != 0
+                    and shape.kind != "decode")
+    with mesh, activation_sharding(
+            mesh, seq_sharded=seq_sharded_acts,
+            attn_seq_parallel=bool(opts.get("attn_sp", auto_attn_sp)),
+            residual_seq_parallel=bool(opts.get("sp", False)),
+            bf16_all_reduce=bool(opts.get("bf16_ar", False))):
+        if shape.kind == "train":
+            step = make_train_step(cfg, accum_steps=accum_steps,
+                                   quantized_opt=quantized_opt)
+            metrics_sh = {"loss": rep, "grad_norm": rep}
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, opt_sh, batch_sh),
+                out_shardings=(p_sh, opt_sh, metrics_sh),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+            state_bytes = (_sharded_bytes(params_abs, p_sh)
+                           + _sharded_bytes(opt_abs.m, p_sh)
+                           + _sharded_bytes(opt_abs.v, p_sh))
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            out_sh = NamedSharding(
+                mesh, P(None,
+                        "model" if cfg.padded_vocab % mesh.shape["model"] == 0
+                        else None))
+            jitted = jax.jit(step, in_shardings=(p_sh, batch_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(params_abs, batch_abs)
+            state_bytes = _sharded_bytes(params_abs, p_sh)
+        else:  # decode
+            seq_sharded = shape.name == "long_500k"
+            cache_abs = S.abstract_cache(cfg, shape.global_batch,
+                                         shape.seq_len,
+                                         jnp.dtype(cfg.dtype))
+            cache_sh = S.cache_shardings(cfg, cache_abs, mesh,
+                                         seq_sharded=seq_sharded)
+            logits_sh = S.logits_sharding(cfg, shape.global_batch, mesh)
+            serve = make_serve_step(cfg)
+            args = [params_abs, cache_abs, batch_abs["token"],
+                    batch_abs["pos"]]
+            in_sh = [p_sh, cache_sh, batch_sh["token"], batch_sh["pos"]]
+            if cfg.is_encdec:
+                args.append(batch_abs["enc_out"])
+                in_sh.append(batch_sh["enc_out"])
+                fn = lambda p, c, t, pos, enc: serve(p, c, t, pos, enc_out=enc)
+            else:
+                fn = lambda p, c, t, pos: serve(p, c, t, pos)
+            jitted = jax.jit(fn, in_shardings=tuple(in_sh),
+                             out_shardings=(logits_sh, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(*args)
+            state_bytes = (_sharded_bytes(params_abs, p_sh)
+                           + _sharded_bytes(cache_abs, cache_sh))
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # ---- analysis ----
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(ma, k)
+        }
+    except Exception:
+        pass
+
+    text = compiled.as_text()
+    hlo_stats = hlo_mod.analyze(text)
+    coll = hlo_stats["collectives"]
+
+    total, active = cfg.param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        model_flops = 6 * active * tokens
+    elif shape.kind == "prefill":
+        model_flops = 2 * active * tokens
+    else:
+        model_flops = 2 * active * shape.global_batch
+
+    roof = hlo_mod.roofline_terms(
+        flops=hlo_stats["flops"],
+        hbm_bytes=hlo_stats["hbm_bytes"],
+        coll=coll, chips=chips, model_flops=model_flops)
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_flops": hlo_stats["flops"],
+        "hlo_hbm_bytes": hlo_stats["hbm_bytes"],
+        "cost_analysis": cost,
+        "memory_analysis": mem,
+        "collectives": coll,
+        "roofline": roof,
+        "state_bytes_per_device": state_bytes,
+        "params_total": total, "params_active": active,
+        "accum_steps": accum_steps,
+        "opts": opts,
+    }
+
+
+def run_cell(arch, shape_name, mesh_kind, out_dir, accum_steps=1,
+             opts=None, tag=""):
+    rec = lower_cell(arch, shape_name, mesh_kind == "multi",
+                     accum_steps=accum_steps, opts=opts)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_all(out_dir, meshes=("single", "multi"), timeout=3600,
+            only_missing=False):
+    cells = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            for mesh_kind in meshes:
+                cells.append((arch, shape_name, mesh_kind))
+    results = []
+    for arch, shape_name, mesh_kind in cells:
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+        if only_missing and os.path.exists(path):
+            with open(path) as f:
+                rec = json.load(f)
+            results.append(rec)
+            print(f"[cached] {arch} {shape_name} {mesh_kind}: {rec['status']}")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape_name, "--mesh", mesh_kind,
+               "--out", out_dir]
+        t0 = time.time()
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=timeout)
+            ok = proc.returncode == 0
+            err = proc.stderr[-2000:] if not ok else ""
+        except subprocess.TimeoutExpired:
+            ok, err = False, "timeout"
+        if ok and os.path.exists(path):
+            with open(path) as f:
+                rec = json.load(f)
+        else:
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                   "status": "failed", "error": err}
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+        results.append(rec)
+        print(f"[{time.time()-t0:6.1f}s] {arch} {shape_name} {mesh_kind}: "
+              f"{rec['status']}")
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "failed" for r in results)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped, {n_fail} failed, "
+          f"of {len(results)} cells ==")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--only-missing", action="store_true")
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--attn-sp", action="store_true",
+                    help="context-parallel attention (queries over 'model')")
+    ap.add_argument("--sp", action="store_true",
+                    help="Megatron-style sequence-parallel residual stream")
+    ap.add_argument("--bf16-ar", action="store_true",
+                    help="pin residual to bf16 (TP all-reduces in bf16)")
+    ap.add_argument("--q8opt", action="store_true",
+                    help="int8 (block-scaled) optimizer moments")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output JSON (perf iterations)")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    args = ap.parse_args()
+    if args.all:
+        results = run_all(args.out, only_missing=args.only_missing)
+        sys.exit(1 if any(r["status"] == "failed" for r in results) else 0)
+    opts = {}
+    if args.attn_sp:
+        opts["attn_sp"] = True
+    if args.sp:
+        opts["sp"] = True
+    if args.bf16_ar:
+        opts["bf16_ar"] = True
+    if args.q8opt:
+        opts["q8opt"] = True
+    rec = run_cell(args.arch, args.shape, args.mesh, args.out,
+                   accum_steps=args.accum_steps, opts=opts, tag=args.tag)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("cost_analysis",)}, indent=1)[:4000])
+    if rec["status"] == "ok":
+        print("memory_analysis:", rec["memory_analysis"])
+        print("cost flops: %.3e  bytes: %.3e" % (
+            rec["cost_analysis"].get("flops", 0),
+            rec["cost_analysis"].get("bytes accessed", 0)))
+    sys.exit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,403 @@
+"""Post-SPMD HLO analysis: scan-aware FLOP / byte / collective accounting.
+
+``compiled.cost_analysis()`` reports ONE iteration of every ``while`` loop
+(scanned layer stacks, chunked attention), so it can undercount by the
+layer count.  This module parses the optimized (partitioned) HLO text
+instead and walks the call graph with loop-trip multipliers (XLA annotates
+``known_trip_count`` in ``backend_config``):
+
+  * flops       — 2 * prod(result) * prod(contracted lhs dims) per dot,
+                  multiplied along the call chain (fusion bodies included).
+  * hbm bytes   — per *kernel boundary* op (fusion internals excluded):
+                  operands read + result written.
+  * collectives — result-buffer bytes per kind, trip-multiplied; wire
+                  bytes via ring formulas.
+
+Shapes in a partitioned module are per-device, so all numbers are
+per-chip.  Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+PEAK_FLOPS = 197e12       # bf16 MXU, per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "c64": 8, "c128": 16, "u4": 1, "s4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OPCODE_RE = re.compile(r"([\w\-]+)\(")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n":"(\d+)"')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+# ops that don't represent real HBM traffic at a kernel boundary
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call", "get-dimension-size", "reshape",
+    "optimization-barrier", "rng-bit-generator", "rng",
+}
+
+
+def _bytes_of_type(s: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims_of_type(s: str) -> list[int]:
+    m = _TYPE_RE.search(s)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: list
+    line: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    ops: list
+    symbols: dict            # op name -> result type string
+
+
+def _balanced(s: str, start: int = 0) -> int:
+    """Index just past the paren group opening at ``start`` ('(' there)."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_op_line(line: str):
+    s = line.strip()
+    is_root = s.startswith("ROOT ")
+    if is_root:
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):           # tuple result type (may contain
+        end = _balanced(rest)          # /*index=k*/ comments)
+        rtype, rest2 = rest[:end], rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype, rest2 = rest[:sp], rest[sp + 1:].lstrip()
+    mo = _OPCODE_RE.match(rest2)
+    if not mo:
+        return None
+    opcode = mo.group(1)
+    ostart = rest2.find("(")
+    oend = _balanced(rest2, ostart)
+    operands = _OPERAND_RE.findall(rest2[ostart:oend])
+    return _Op(name, rtype, opcode, operands, line, is_root)
+
+
+def parse_hlo(text: str) -> dict:
+    """text -> {comp_name: _Comp}; the computation named ENTRY is entry."""
+    comps: dict[str, _Comp] = {}
+    entry = None
+    cur: _Comp | None = None
+    for line in text.splitlines():
+        if cur is None or not line.startswith("  "):
+            mh = _COMP_RE.match(line)
+            if mh and ("->" in line):
+                cur = _Comp(mh.group(1), [], {})
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        op = _parse_op_line(line)
+        if op is None:
+            continue
+        cur.ops.append(op)
+        cur.symbols[op.name] = op.result_type
+    return {"comps": comps, "entry": entry}
+
+
+def _call_multipliers(parsed: dict) -> tuple[dict, set]:
+    """comp -> execution count multiplier; set of fusion-internal comps."""
+    comps = parsed["comps"]
+    mult = {name: 0.0 for name in comps}
+    fused: set[str] = set()
+    entry = parsed["entry"]
+    if entry is None:
+        return mult, fused
+    mult[entry] = 1.0
+    # process in topological-ish order: repeat until fixpoint (call graphs
+    # are DAGs; a few passes suffice)
+    for _ in range(len(comps)):
+        changed = False
+        for name, comp in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for op in comp.ops:
+                if op.opcode == "while":
+                    body = _BODY_RE.search(op.line)
+                    cond = _COND_RE.search(op.line)
+                    trip = _TRIP_RE.search(op.line)
+                    n = float(trip.group(1)) if trip else 1.0
+                    for ref, k in ((body, n), (cond, n + 1)):
+                        if ref and mult.get(ref.group(1), 0.0) < m * k:
+                            mult[ref.group(1)] = m * k
+                            changed = True
+                else:
+                    for ref in _CALLS_RE.finditer(op.line):
+                        target = ref.group(1)
+                        if op.opcode in ("fusion", "reduce", "scatter",
+                                         "sort", "map", "reduce-window",
+                                         "select-and-scatter", "reduce-scatter",
+                                         "all-reduce"):
+                            fused.add(target)
+                        if mult.get(target, 0.0) < m:
+                            mult[target] = m
+                            changed = True
+        if not changed:
+            break
+    return mult, fused
+
+
+def _dot_flops(op: _Op, comp: _Comp) -> float:
+    out = 1.0
+    for d in _dims_of_type(op.result_type):
+        out *= d
+    mc = _CONTRACT_RE.search(op.line)
+    k = 1.0
+    if mc and op.operands:
+        lhs_type = comp.symbols.get(op.operands[0], "")
+        dims = _dims_of_type(lhs_type)
+        for idx in (int(x) for x in mc.group(1).split(",") if x):
+            if idx < len(dims):
+                k *= dims[idx]
+    return 2.0 * out * k
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+_SLICING_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_bytes(op: _Op, comp: _Comp, comps: dict) -> int:
+    """HBM traffic of one fusion kernel.
+
+    Refinements over naive result+operands:
+      * an operand consumed only through dynamic-slice/slice/gather is
+        charged at the slice size (remat-stack reads, embedding gathers);
+      * an operand that is only the in-place buffer of a
+        dynamic-update-slice is charged zero (aliased carry update);
+      * a root dynamic-update-slice writes only the updated slice.
+    """
+    m = _CALLS_RE.search(op.line)
+    fcomp = comps.get(m.group(1)) if m else None
+    if fcomp is None:
+        b = _bytes_of_type(op.result_type)
+        for o in op.operands:
+            b += _bytes_of_type(comp.symbols.get(o, ""))
+        return b
+    defs = {x.name: x for x in fcomp.ops}
+    _WRAPPERS = ("convert", "bitcast", "copy")
+
+    def _resolve(name: str):
+        """Follow elementwise wrapper chains (on TPU these fuse for free;
+        the CPU backend materializes whole-buffer converts around carry
+        updates — an artifact we must not charge to the TPU roofline)."""
+        d = defs.get(name)
+        seen = 0
+        while d is not None and d.opcode in _WRAPPERS and d.operands \
+                and seen < 4:
+            d = defs.get(d.operands[0])
+            seen += 1
+        return d
+
+    # ---- write side ----
+    root = next((x for x in fcomp.ops if x.is_root), None)
+
+    def _dus_write(d: _Op) -> int:
+        return 2 * _bytes_of_type(fcomp.symbols.get(d.operands[1], "")) \
+            if len(d.operands) > 1 else 0
+
+    rroot = _resolve(root.name) if root is not None else None
+    if rroot is not None and rroot.opcode == "dynamic-update-slice":
+        wb = _dus_write(rroot)
+    elif root is not None and root.opcode == "tuple":
+        wb = 0
+        for o in root.operands:
+            d = _resolve(o)
+            if d is not None and d.opcode == "dynamic-update-slice":
+                wb += _dus_write(d)
+            else:
+                wb += _bytes_of_type(fcomp.symbols.get(o, ""))
+    else:
+        wb = _bytes_of_type(op.result_type)
+    # ---- read side ----
+    consumers: dict[str, list] = {}
+    for x in fcomp.ops:
+        for o in x.operands:
+            consumers.setdefault(o, []).append(x)
+
+    def _is_buffer_feed(pname: str, c: _Op, depth: int = 0) -> bool:
+        """True if consumer chain uses the param only as DUS operand-0
+        (possibly through convert/bitcast/copy wrappers)."""
+        if c.opcode == "dynamic-update-slice":
+            return bool(c.operands) and c.operands[0] == pname
+        if c.opcode in _WRAPPERS and depth < 4:
+            nxt = consumers.get(c.name, [])
+            return bool(nxt) and all(
+                _is_buffer_feed(c.name, n, depth + 1) for n in nxt)
+        return False
+
+    rb = 0
+    for x in fcomp.ops:
+        if x.opcode != "parameter":
+            continue
+        cons = consumers.get(x.name, [])
+        if cons and all(c.opcode in _SLICING_OPS for c in cons):
+            rb += sum(_bytes_of_type(c.result_type) for c in cons)
+        elif cons and all(_is_buffer_feed(x.name, c) for c in cons):
+            rb += 0   # aliased in-place carry buffer
+        else:
+            rb += _bytes_of_type(x.result_type)
+    return wb + rb
+
+
+def analyze(text: str) -> dict:
+    """Scan-aware per-chip {flops, hbm_bytes, collectives} of one module."""
+    parsed = parse_hlo(text)
+    mult, fused = _call_multipliers(parsed)
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts = {k: 0.0 for k in _COLLECTIVES}
+    for name, comp in parsed["comps"].items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        boundary = name not in fused
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                flops += m * _dot_flops(op, comp)
+            base = op.opcode
+            for c in _COLLECTIVES:
+                if base == c or base == c + "-start":
+                    nbytes = _bytes_of_type(op.result_type)
+                    coll_bytes[c] += m * nbytes
+                    coll_counts[c] += m
+                    break
+            if boundary and op.opcode not in _FREE_OPS \
+                    and not op.opcode.endswith("-done") \
+                    and not any(op.opcode.startswith(c) for c in _COLLECTIVES):
+                if op.opcode == "fusion":
+                    b = _fusion_bytes(op, comp, parsed["comps"])
+                elif op.opcode == "dynamic-update-slice":
+                    # in-place: read + write only the updated slice
+                    upd = (comp.symbols.get(op.operands[1], "")
+                           if len(op.operands) > 1 else "")
+                    b = 2 * _bytes_of_type(upd)
+                elif op.opcode == "dynamic-slice":
+                    b = 2 * _bytes_of_type(op.result_type)
+                else:
+                    b = _bytes_of_type(op.result_type)
+                    for o in op.operands:
+                        b += _bytes_of_type(comp.symbols.get(o, ""))
+                hbm += m * b
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collectives": {
+            "bytes": coll_bytes, "counts": coll_counts,
+            "total_bytes": sum(coll_bytes.values()),
+            "total_count": sum(coll_counts.values()),
+        },
+    }
+
+
+def collective_bytes(text: str) -> dict:
+    return analyze(text)["collectives"]
+
+
+# ring-algorithm wire multipliers (bytes crossing a device's links as a
+# multiple of the per-device result buffer; (P-1)/P ~ 1 at P >= 16)
+_WIRE_MULT = {
+    "all-gather": 1.0,        # receives the full gathered buffer
+    "all-reduce": 2.0,        # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def wire_bytes(coll: dict) -> float:
+    return sum(_WIRE_MULT[k] * v for k, v in coll["bytes"].items())
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll: dict,
+                   chips: int = 1, model_flops: float | None = None) -> dict:
+    """Three per-chip roofline terms in seconds + the dominant one."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = wire_bytes(coll) / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)),
+        key=lambda kv: kv[1])[0]
+    out = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": max(t_compute, t_memory, t_coll),
+    }
+    if model_flops is not None:
+        out["model_flops"] = model_flops
+        out["useful_fraction"] = (
+            model_flops / (flops * chips) if flops else 0.0)
+    return out

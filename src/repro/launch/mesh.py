@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+The target is a TPU v5e pod: 16x16 = 256 chips single-pod, and a 2-pod
+512-chip job with a leading "pod" axis (DCN data parallelism across pods,
+ICI inside a pod).  Defined as a FUNCTION so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()[:ndev]
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for mesh {shape}, have {len(devices)}; "
+            "the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_smoke_mesh(shape=(1,), axes=("data",)) -> Mesh:
+    """Tiny mesh over whatever devices exist (tests / CPU CI)."""
+    import numpy as np
+    devs = np.array(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes that carry data parallelism ("pod" spans pods over DCN)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,197 @@
+"""Abstract input specs + sharding assignment for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation); the
+``*_shardings`` helpers map the param / optimizer / cache trees onto the
+production mesh via the logical-axis rules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.distributed.sharding import params_shardings, partition_spec
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim.adamw import adamw_init
+
+from .mesh import dp_axes
+
+
+def _dp(mesh: Mesh, dim: int):
+    """DP axis-spec entry for a batch dimension, dropped if indivisible."""
+    axes = dp_axes(mesh)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if not axes or dim % size != 0:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+# ---------------------------------------------------------------------------
+# Abstract trees (no allocation)
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct params tree, logical-axes tree)."""
+    return T.init_model_abstract(cfg)
+
+
+def abstract_opt_state(params_abs, quantized: bool = False):
+    return jax.eval_shape(lambda p: adamw_init(p, quantize=quantized),
+                          params_abs)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, max_len, dtype))
+
+
+def enc_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Encoder memory length for enc-dec archs (audio frames, stub)."""
+    return min(shape.seq_len, 4096)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for the step function's data arguments."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.frontend:
+            out["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.d_model), act)
+        if cfg.is_encdec:
+            out["enc_embeds"] = jax.ShapeDtypeStruct(
+                (b, enc_len(cfg, shape), cfg.d_model), act)
+        return out
+    # decode: one new token against a seq_len KV cache
+    out = {
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+    if cfg.is_encdec:
+        out["enc_out"] = jax.ShapeDtypeStruct(
+            (b, enc_len(cfg, shape), cfg.d_model), act)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> dict:
+    """NamedSharding per input_specs entry (batch dim over DP)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, sds in specs.items():
+        if sds.ndim == 0:
+            out[name] = NamedSharding(mesh, P())
+        else:
+            dp = _dp(mesh, sds.shape[0])
+            out[name] = NamedSharding(
+                mesh, P(dp, *([None] * (sds.ndim - 1))))
+    return out
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh,
+                          quantized_opt: bool = False):
+    """(params sharding tree, opt-state sharding tree)."""
+    params_abs, axes = abstract_params(cfg)
+    p_sh = params_shardings(axes, params_abs, mesh)
+    opt_abs = abstract_opt_state(params_abs, quantized=quantized_opt)
+    rep = NamedSharding(mesh, P())
+    if quantized_opt:
+        # Q8 leaves (int8 payload + per-block scale): payload mirrors the
+        # param sharding; the scale mirrors it too on all but the last
+        # dim (kept when the blocked length still divides) — replicated
+        # scales at 340B cost 21 GB/chip and force gather storms.
+        from repro.optim.quantized import Q8
+
+        def mom_sh(q8_leaf, p_leaf_sh):
+            if not isinstance(q8_leaf, Q8):
+                return p_leaf_sh
+            spec = list(p_leaf_sh.spec)
+            spec += [None] * (q8_leaf.scale.ndim - len(spec))
+            spec = spec[:q8_leaf.scale.ndim]
+            last = q8_leaf.scale.shape[-1]
+            ax = spec[-1] if spec else None
+            if ax is not None:
+                size = 1
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    size *= mesh.shape[a]
+                if last % size != 0:
+                    spec[-1] = None
+            return Q8(q=p_leaf_sh,
+                      scale=NamedSharding(mesh, P(*spec)))
+
+        m_sh = jax.tree.map(mom_sh, opt_abs.m, p_sh,
+                            is_leaf=lambda x: isinstance(x, Q8))
+        v_sh = jax.tree.map(mom_sh, opt_abs.v, p_sh,
+                            is_leaf=lambda x: isinstance(x, Q8))
+        opt_sh = type(opt_abs)(step=rep, m=m_sh, v=v_sh)
+    else:
+        opt_sh = type(opt_abs)(step=rep, m=p_sh, v=p_sh)
+    return params_abs, p_sh, opt_abs, opt_sh
+
+
+def _model_div(mesh: Mesh, dim: int):
+    return "model" if dim % mesh.shape["model"] == 0 else None
+
+
+def cache_shardings(cfg: ModelConfig, cache_abs, mesh: Mesh,
+                    seq_sharded: bool = False):
+    """Sharding tree for a decode cache.
+
+    KV caches [B,T,kv,hd]: batch over DP, kv heads over "model";
+    for long-context (B=1) the sequence dim shards over "data" instead
+    (flash-decode: SPMD inserts the partial-softmax merge).
+    SSM states [B,nh,hd,n]: batch over DP, heads over "model".
+    Stacked (scanned) layers carry a leading n_groups dim (never sharded).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abs)
+    out = []
+    for path, leaf in flat:
+        keys = [getattr(pp, "key", getattr(pp, "idx", None)) for pp in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+        stacked = "stack" in keys
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        if name in ("k", "v"):                       # [B, T, kv, hd]
+            kv_ax = _model_div(mesh, shape[2])
+            # kv heads indivisible by TP -> shard the sequence over "model"
+            # instead (flash-decode: SPMD merges the partial softmax)
+            seq_ax = ("data" if seq_sharded else
+                      ("model" if kv_ax is None
+                       and shape[1] % mesh.shape["model"] == 0 else None))
+            spec = [_dp(mesh, shape[0]), seq_ax, kv_ax, None]
+        elif name in ("c_kv", "k_rope"):             # [B, T, r]
+            # MLA: every (sharded) q head needs the full compressed stream;
+            # shard the sequence over "model" (partial-softmax merge)
+            seq_ax = ("data" if seq_sharded else
+                      ("model" if shape[1] % mesh.shape["model"] == 0
+                       else None))
+            spec = [_dp(mesh, shape[0]), seq_ax, None]
+        elif name == "conv":                         # [B, K-1, ch]
+            spec = [_dp(mesh, shape[0]), None, _model_div(mesh, shape[2])]
+        elif name == "state":                        # [B, nh, hd, n]
+            spec = [_dp(mesh, shape[0]), _model_div(mesh, shape[1]),
+                    None, None]
+        else:
+            spec = [None] * len(shape)
+        if seq_sharded and spec[0] is not None and "data" in spec[1:]:
+            spec[0] = None if "pod" not in mesh.axis_names else "pod"
+        if stacked:
+            spec = [None] + spec
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def logits_sharding(cfg: ModelConfig, batch: int, mesh: Mesh):
+    return NamedSharding(mesh, P(_dp(mesh, batch), None,
+                                 _model_div(mesh, cfg.padded_vocab)))

@@ -1,0 +1,103 @@
+"""Step functions: train (CE loss + AdamW), prefill, decode.
+
+Factories close over the static config; the returned functions are pure
+pytree->pytree maps suitable for ``jax.jit(...).lower().compile()`` (the
+dry-run) and for real execution (examples/train_lm.py).
+
+Gradient accumulation: ``accum_steps > 1`` scans over microbatches with
+f32 grad accumulators — the standard memory/throughput knob at scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim.adamw import adamw_update
+
+
+def _model_kwargs(cfg: ModelConfig, batch: dict) -> dict:
+    kw = {}
+    if "frontend_embeds" in batch:
+        kw["frontend_embeds"] = batch["frontend_embeds"]
+    if "enc_embeds" in batch:
+        kw["enc_embeds"] = batch["enc_embeds"]
+    return kw
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict):
+    """Mean next-token cross-entropy (f32 softmax over the sharded vocab)."""
+    h = T.forward(params, cfg, batch["tokens"], **_model_kwargs(cfg, batch))
+    logits = T.logits_from_hidden(params, cfg, h).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
+    return -jnp.mean(ll)
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4,
+                    weight_decay: float = 0.01, accum_steps: int = 1,
+                    quantized_opt: bool = False):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                l, g = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / accum_steps,
+                    acc, g)
+                return acc, l
+
+            grads, losses = jax.lax.scan(body, zeros, micro)
+            loss = jnp.mean(losses)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        params, opt_state = adamw_update(
+            params, grads, opt_state, lr=lr, weight_decay=weight_decay,
+            quantize=quantized_opt)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, batch) -> last-position logits [B, vocab]."""
+
+    def prefill_step(params, batch):
+        h = T.forward(params, cfg, batch["tokens"],
+                      **_model_kwargs(cfg, batch))
+        return T.logits_from_hidden(params, cfg, h[:, -1:, :])[:, 0]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, cache, token, pos[, enc_out]) -> (logits, new_cache).
+
+    One decode step: appends the token's KV at ``pos`` and attends over the
+    seq_len-long cache (the decode_32k / long_500k cells).
+    """
+
+    def serve_step(params, cache, token, pos, enc_out=None):
+        logits, cache = T.decode_step(params, cfg, token, cache, pos,
+                                      enc_out=enc_out)
+        return logits, cache
+
+    return serve_step

@@ -1,0 +1,299 @@
+"""Attention variants: GQA (+ sliding window, qk-norm, biasless), MLA, cross.
+
+Train path: full-sequence causal attention (optionally windowed).
+Decode path: single-token query against a KV cache; for MLA the cache holds
+the compressed c_kv/k_rope streams (paper-accurate kv_lora caching).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Builder, apply_rope, rms_norm
+from repro.distributed.sharding import shard_act
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+
+def init_gqa(key, cfg):
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b = Builder(key, jnp.dtype(cfg.param_dtype))
+    b.dense("wq", (d, h, hd), ("embed", "heads", None))
+    b.dense("wk", (d, kvh, hd), ("embed", "kv", None))
+    b.dense("wv", (d, kvh, hd), ("embed", "kv", None))
+    b.dense("wo", (h, hd, d), ("heads", None, "embed"), fan_in=h * hd)
+    if cfg.qk_norm:
+        b.const("q_norm", (hd,), (None,))
+        b.const("k_norm", (hd,), (None,))
+    return b.build()
+
+
+def _qkv(p, cfg, x, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, softcap=None):
+    """q: [B,S,H,hd], k/v: [B,T,KV,hd]; grouped-query broadcast."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def causal_mask(s: int, window=None):
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= (i - j) < window
+    return m[None, None, None]  # [1,1,1,S,T]
+
+
+# Query-block size for the memory-bounded attention path.  Scores are
+# materialized per block ([B,H,Qc,T] instead of [B,H,S,T]) — the structural
+# fix that makes the 32k-seq shapes fit (DESIGN.md §5); exact softmax, no
+# approximation.
+QCHUNK = 2048
+
+
+def _block_mask(i_idx, j_idx, causal, window):
+    m = jnp.ones((i_idx.shape[0], j_idx.shape[0]), dtype=bool)
+    if causal:
+        m &= j_idx[None, :] <= i_idx[:, None]
+    if window is not None:
+        m &= (i_idx[:, None] - j_idx[None, :]) < window
+    return m[None, None, None]  # [1,1,1,Qc,T]
+
+
+def _sdpa_chunked(q, k, v, *, causal=True, window=None, softcap=None,
+                  qchunk: int = QCHUNK):
+    """Exact attention, scanned over query blocks: live scores are
+    [B,KV,G,Qc,T].  Falls back to one block when S <= qchunk or S % qchunk."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    j_idx = jnp.arange(t)
+    if s <= qchunk or s % qchunk != 0:
+        mask = _block_mask(jnp.arange(s), j_idx, causal, window)
+        return _sdpa(q, k, v, mask, softcap)
+    nblk = s // qchunk
+    qb = q.reshape(b, nblk, qchunk, h, hd).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(nblk) * qchunk
+
+    def body(_, inp):
+        qi, start = inp
+        i_idx = start + jnp.arange(qchunk)
+        mask = _block_mask(i_idx, j_idx, causal, window)
+        return None, _sdpa(qi, k, v, mask, softcap)
+
+    _, out = jax.lax.scan(body, None, (qb, starts))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def apply_gqa(p, cfg, x, positions, window=None):
+    q, k, v = _qkv(p, cfg, x, positions)
+    # optional context parallelism: queries sharded over "model", K/V
+    # all-gathered (cheap for GQA) — see activation_sharding(attn_seq_parallel)
+    q = shard_act(q, "attn_q")
+    if (cfg.use_flash_attention and window is None
+            and cfg.attn_logit_softcap is None
+            and x.shape[1] % 128 == 0):
+        from repro.kernels.flash_attention import flash_gqa
+        out = flash_gqa(q, k, v, causal=True,
+                        bq=min(512, x.shape[1]), bk=min(512, x.shape[1]))
+    else:
+        out = _sdpa_chunked(q, k, v, causal=True, window=window,
+                            softcap=cfg.attn_logit_softcap)
+    out = shard_act(out, "attn_q")
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def gqa_cache_len(max_len: int, window=None) -> int:
+    """Ring-buffer length: sliding-window layers cache only ~window
+    positions (128-aligned) — at 500k context this is a ~1000x cache
+    memory/compute saving for gemma3-style local layers."""
+    if window is None:
+        return max_len
+    return min(max_len, max((window + 127) // 128 * 128, 128))
+
+
+def init_gqa_cache(cfg, batch, max_len, dtype, window=None):
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    t_buf = gqa_cache_len(max_len, window)
+    shape = (batch, t_buf, kvh, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_gqa(p, cfg, x, cache, pos, window=None):
+    """x: [B,1,d]; pos: scalar current position. Returns (out, new_cache).
+
+    The cache is a ring buffer of length t_buf <= max_len: slot
+    ``pos % t_buf`` holds the newest entry and each slot j's global
+    position is recovered as ``pos - ((pos - j) mod t_buf)``.  With
+    t_buf == max_len this degenerates to the plain linear cache."""
+    positions = pos[None, None] if jnp.ndim(pos) == 0 else pos[:, None]
+    q, k, v = _qkv(p, cfg, x, positions.astype(jnp.int32))
+    t_buf = cache["k"].shape[1]
+    slot = pos % t_buf
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    j = jnp.arange(t_buf)[None, :]
+    gpos = pos - ((pos - j) % t_buf)
+    mask = gpos >= 0
+    if window is not None:
+        mask &= (pos - gpos) < window
+    mask = mask[None, None, None]                       # [1,1,1,1,Tb]
+    out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask,
+                cfg.attn_logit_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV, rope/nope split
+
+def init_mla(key, cfg):
+    d, h = cfg.d_model, cfg.num_heads
+    r, qr, qn, vd = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    b = Builder(key, jnp.dtype(cfg.param_dtype))
+    b.dense("wq", (d, h, qn + qr), ("embed", "heads", None))
+    b.dense("wkv_down", (d, r + qr), ("embed", "lora"))
+    b.dense("wk_up", (r, h, qn), ("lora", "heads", None))
+    b.dense("wv_up", (r, h, vd), ("lora", "heads", None))
+    b.dense("wo", (h, vd, d), ("heads", None, "embed"), fan_in=h * vd)
+    b.const("kv_norm", (r,), (None,))
+    return b.build()
+
+
+def _mla_qc(p, cfg, x, positions):
+    dt = x.dtype
+    r, qr, qn = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    q_nope, q_rope = q[..., :qn], q[..., qn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    down = x @ p["wkv_down"].astype(dt)                  # [B,S,r+qr]
+    c_kv, k_rope = down[..., :r], down[..., r:]
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, mask):
+    """Absorbed-weight MLA attention: score in compressed space."""
+    dt = q_nope.dtype
+    qn = cfg.qk_nope_dim
+    # absorb wk_up into the query: q_c [B,S,H,r]
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_up"].astype(dt))
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_c, c_kv)
+        + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+    ).astype(jnp.float32) / math.sqrt(qn + cfg.qk_rope_dim)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+    ctx = jnp.einsum("bhst,btr->bshr", w, c_kv)           # compressed context
+    out = jnp.einsum("bshr,rhv->bshv", ctx, p["wv_up"].astype(dt))
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dt))
+
+
+def apply_mla(p, cfg, x, positions, qchunk: int = QCHUNK):
+    q_nope, q_rope, c_kv, k_rope = _mla_qc(p, cfg, x, positions)
+    b, s = x.shape[0], x.shape[1]
+    j_idx = jnp.arange(s)
+    if s <= qchunk or s % qchunk != 0:
+        mask = (j_idx[None, :] <= j_idx[:, None])[None, None]
+        return _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, mask)
+    nblk = s // qchunk
+    h = q_nope.shape[2]
+    qn_b = q_nope.reshape(b, nblk, qchunk, h, -1).transpose(1, 0, 2, 3, 4)
+    qr_b = q_rope.reshape(b, nblk, qchunk, h, -1).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(nblk) * qchunk
+
+    def body(_, inp):
+        qn_i, qr_i, start = inp
+        i_idx = start + jnp.arange(qchunk)
+        mask = (j_idx[None, :] <= i_idx[:, None])[None, None]
+        return None, _mla_attend(p, cfg, qn_i, qr_i, c_kv, k_rope, mask)
+
+    _, out = jax.lax.scan(body, None, (qn_b, qr_b, starts))
+    return out.transpose(1, 0, 2, 3).reshape(b, s, -1)
+
+
+def init_mla_cache(cfg, batch, max_len, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def decode_mla(p, cfg, x, cache, pos):
+    positions = pos[None, None].astype(jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qc(p, cfg, x, positions)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), pos, axis=1)
+    t = ck.shape[1]
+    mask = (jnp.arange(t)[None, :] <= pos)[None, None]
+    y = _mla_attend(p, cfg, q_nope, q_rope, ck.astype(x.dtype),
+                    kr.astype(x.dtype), mask)
+    return y, {"c_kv": ck, "k_rope": kr}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec)
+
+def init_cross(key, cfg):
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b = Builder(key, jnp.dtype(cfg.param_dtype))
+    b.dense("wq", (d, h, hd), ("embed", "heads", None))
+    b.dense("wk", (d, kvh, hd), ("embed", "kv", None))
+    b.dense("wv", (d, kvh, hd), ("embed", "kv", None))
+    b.dense("wo", (h, hd, d), ("heads", None, "embed"), fan_in=h * hd)
+    return b.build()
+
+
+def cross_kv(p, enc_out):
+    dt = enc_out.dtype
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"].astype(dt))
+    return k, v
+
+
+def apply_cross(p, cfg, x, enc_kv):
+    k, v = enc_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    out = _sdpa_chunked(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Bidirectional self-attention (encoder)
+
+def apply_bidir(p, cfg, x, positions):
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = _sdpa_chunked(q, k, v, causal=False,
+                        softcap=cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))

@@ -1,0 +1,169 @@
+"""Shared building blocks: param init helpers, norms, MLPs, rope, embeddings.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every init
+function returns ``(params, axes)`` where ``axes`` mirrors the params tree
+with a tuple of *logical axis names* per array dimension; the distributed
+runtime (``repro.distributed.sharding``) maps logical names onto mesh axes.
+
+Logical axes used across the stack:
+  vocab   — vocabulary dim            (TP: sharded over "model")
+  embed   — d_model dim               (FSDP: sharded over "data")
+  heads   — flattened attention heads (TP)
+  kv      — kv-head dim               (TP when divisible, else replicated)
+  mlp     — FFN hidden dim            (TP)
+  expert  — MoE expert dim            (EP over "model")
+  inner   — SSM inner dim             (TP)
+  lora    — MLA compressed dim        (replicated)
+  stack   — scan-stacked layer dim    (never sharded)
+  None    — replicated
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+import contextvars
+
+# When set, Builders emit jax.ShapeDtypeStruct leaves instead of arrays:
+# used for (a) the dry-run's allocation-free param trees and (b) computing
+# the logical-axes tree without touching device memory.
+ABSTRACT_INIT = contextvars.ContextVar("abstract_init", default=False)
+
+
+def normal_init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+class Builder:
+    """Tiny helper that threads an rng key and collects (params, axes)."""
+
+    def __init__(self, key, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    @property
+    def abstract(self):
+        return ABSTRACT_INIT.get()
+
+    def key(self):
+        if self.abstract:
+            return None
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def dense(self, name, shape, axes, fan_in=None):
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(shape, self.dtype)
+        else:
+            fan_in = fan_in or shape[0]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+            self.params[name] = normal_init(self.key(), shape, scale, self.dtype)
+        self.axes[name] = axes
+        return self
+
+    def const(self, name, shape, axes, value=0.0):
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(shape, self.dtype)
+        else:
+            self.params[name] = jnp.full(shape, value, dtype=self.dtype)
+        self.axes[name] = axes
+        return self
+
+    def child(self, name, params, axes):
+        self.params[name] = params
+        self.axes[name] = axes
+        return self
+
+    def build(self):
+        return self.params, self.axes
+
+
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def init_norm(key, d, dtype):
+    return jnp.zeros((d,), dtype=dtype), ("embed",)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+def init_mlp(key, d, f, act: str, dtype):
+    b = Builder(key, dtype)
+    gated = act in ("silu", "gelu")
+    if gated:
+        b.dense("wi", (d, f), ("embed", "mlp"))
+        b.dense("wg", (d, f), ("embed", "mlp"))
+    else:
+        b.dense("wi", (d, f), ("embed", "mlp"))
+    b.dense("wo", (f, d), ("mlp", "embed"), fan_in=f)
+    return b.build()
+
+
+def apply_mlp(p, x, act: str):
+    h = x @ p["wi"].astype(x.dtype)
+    if act == "silu":
+        g = x @ p["wg"].astype(x.dtype)
+        h = jax.nn.silu(g) * h
+    elif act == "gelu":
+        g = x @ p["wg"].astype(x.dtype)
+        h = jax.nn.gelu(g) * h
+    elif act == "squared_relu":
+        r = jax.nn.relu(h)
+        h = r * r
+    else:
+        raise ValueError(act)
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+
+def init_embedding(key, vocab, d, dtype):
+    b = Builder(key, dtype)
+    b.dense("tok", (vocab, d), ("vocab", "embed"), fan_in=d)
+    return b.build()
+
+
+def embed_tokens(p, tokens, dtype):
+    return p["tok"].astype(dtype)[tokens]
+
+
+def unembed(p_out, x):
+    return x @ p_out.astype(x.dtype)
+
+
+def init_unembed(key, d, vocab, dtype):
+    b = Builder(key, dtype)
+    b.dense("out", (d, vocab), ("embed", "vocab"))
+    return b.build()

@@ -1,0 +1,181 @@
+"""Mamba-2 block via the SSD (state-space duality) chunked algorithm.
+
+Train path: chunked SSD — intra-chunk quadratic attention-like term plus an
+inter-chunk state recurrence (lax.scan over chunk states), per the minimal
+SSD formulation of the Mamba-2 paper.  Decode path: O(1) recurrent state
+update per token (this is what makes the ``long_500k`` shape tractable).
+
+Single B/C group (mamba2 default), causal depthwise conv over the xBC
+stream, gated RMSNorm before the output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Builder, rms_norm
+
+
+def init_ssm(key, cfg):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = d_in // hd
+    ck = cfg.ssm_conv_kernel
+    b = Builder(key, jnp.dtype(cfg.param_dtype))
+    # in_proj emits [z | x | B | C | dt]
+    b.dense("in_proj", (d, 2 * d_in + 2 * n + nh), ("embed", "inner"))
+    b.dense("conv_w", (ck, d_in + 2 * n), (None, "inner"), fan_in=ck)
+    b.const("conv_b", (d_in + 2 * n,), ("inner",))
+    b.const("a_log", (nh,), (None,), value=0.0)
+    b.const("d_skip", (nh,), (None,), value=1.0)
+    b.const("dt_bias", (nh,), (None,))
+    b.const("out_norm", (d_in,), ("inner",))
+    b.dense("out_proj", (d_in, d), ("inner", "embed"), fan_in=d_in)
+    return b.build()
+
+
+def _split_proj(cfg, proj):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:2 * d_in + 2 * n]
+    dt = proj[..., 2 * d_in + 2 * n:]
+    return z, xbc, dt, d_in, n, nh
+
+
+def _causal_conv(xbc, w, b):
+    """xbc: [B, S, ch]; w: [K, ch] depthwise; left-padded causal."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(x):
+    """x: [..., q] -> [..., q, q] lower-tri pairwise cumulative sums."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a, bmat, cmat, chunk):
+    """Minimal SSD.
+
+    xh:   [B, S, H, P]  head inputs
+    dt:   [B, S, H]     positive step sizes
+    a:    [H]           negative state decay rates
+    bmat: [B, S, N], cmat: [B, S, N]  (single group)
+    returns y: [B, S, H, P]
+    """
+    bsz, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    q = chunk
+
+    xd = xh * dt[..., None]                            # fold dt into x
+    abar = (dt * a[None, None, :])                     # [B,S,H]
+
+    # chunked views
+    xc = xd.reshape(bsz, c, q, h, p)
+    ac = abar.reshape(bsz, c, q, h).transpose(0, 3, 1, 2)   # [B,H,C,Q]
+    bc = bmat.reshape(bsz, c, q, n)
+    cc = cmat.reshape(bsz, c, q, n)
+
+    acum = jnp.cumsum(ac, axis=-1)                     # [B,H,C,Q]
+
+    # 1) intra-chunk (diagonal) term
+    l = jnp.exp(_segsum(ac))                           # [B,H,C,Q,Q]
+    y_diag = jnp.einsum("bcqn,bcsn,bhcqs,bcshp->bcqhp", cc, bc, l, xc)
+
+    # 2) per-chunk final states
+    decay_states = jnp.exp(acum[..., -1:] - acum)      # [B,H,C,Q]
+    states = jnp.einsum("bcqn,bhcq,bcqhp->bchpn", bc, decay_states, xc)
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(acum[..., -1])               # [B,H,C]
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = st + dec[..., None, None] * carry        # [B,H,P,N]
+        return new, carry                              # emit state *before* chunk
+
+    states_t = states.transpose(1, 0, 2, 3, 4)         # [C,B,H,P,N]
+    decay_t = chunk_decay.transpose(2, 0, 1)           # [C,B,H]
+    init = jnp.zeros_like(states_t[0])
+    _, prev_states = jax.lax.scan(scan_fn, init, (states_t, decay_t))
+    prev = prev_states.transpose(1, 0, 2, 3, 4)        # [B,C,H,P,N]
+
+    # 4) inter-chunk (off-diagonal) output
+    state_decay = jnp.exp(acum)                        # [B,H,C,Q]
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", cc, prev, state_decay)
+
+    return (y_diag + y_off).reshape(bsz, s, h, p)
+
+
+def apply_ssm(p, cfg, x):
+    """Train/prefill path. x: [B, S, d] -> [B, S, d]."""
+    dtp = x.dtype
+    proj = x @ p["in_proj"].astype(dtp)
+    z, xbc, dt_raw, d_in, n, nh = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(dtp), p["conv_b"].astype(dtp))
+    xs = xbc[..., :d_in]
+    bmat = xbc[..., d_in:d_in + n].astype(jnp.float32)
+    cmat = xbc[..., d_in + n:].astype(jnp.float32)
+    hd = cfg.ssm_head_dim
+    xh = xs.reshape(*xs.shape[:2], nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y = ssd_chunked(xh, dt, a, bmat, cmat, cfg.ssm_chunk)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(*xs.shape[:2], d_in).astype(dtp)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(dtp)
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent) path
+
+def init_ssm_cache(cfg, batch, dtype):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_kernel - 1, d_in + 2 * n), dtype),
+        "state": jnp.zeros((batch, nh, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def decode_ssm(p, cfg, x, cache):
+    """x: [B, 1, d]. O(1) recurrent update."""
+    dtp = x.dtype
+    proj = x[:, 0] @ p["in_proj"].astype(dtp)           # [B, ...]
+    z, xbc, dt_raw, d_in, n, nh = _split_proj(cfg, proj)
+    # conv over the cached window
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # [B,K,ch]
+    w = p["conv_w"].astype(dtp)
+    conv = jax.nn.silu((win * w[None]).sum(1) + p["conv_b"].astype(dtp))
+    xs = conv[..., :d_in]
+    bvec = conv[..., d_in:d_in + n].astype(jnp.float32)
+    cvec = conv[..., d_in + n:].astype(jnp.float32)
+    hd = cfg.ssm_head_dim
+    xh = xs.reshape(-1, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, :])                    # [B,H]
+    # state: [B,H,P,N]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, bvec)
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, cvec)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, d_in).astype(dtp)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(dtp))[:, None, :]
+    return out, {"conv": win[:, 1:], "state": state}

@@ -1,0 +1,334 @@
+"""Model assembly: layer stacks for every family, train/prefill/decode paths.
+
+Layer stacking: the decoder is split into ``prefix`` (unrolled, e.g.
+deepseek's leading dense layer), a scanned region of identical groups of
+``cfg.scan_group`` layers (``lax.scan`` over stacked params — keeps HLO
+size O(1) in depth and gives XLA a natural overlap pipeline), and an
+unrolled ``remainder`` (e.g. gemma3's 26 = 4x6 + 2).  Layer *kinds* inside
+a group follow the periodic pattern (jamba 7 ssm : 1 attn, gemma 5 local :
+1 global, jamba MoE every 2nd), so every scanned group is structurally
+identical by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import (ABSTRACT_INIT, Builder, apply_mlp, embed_tokens,
+                     init_embedding, init_mlp, init_unembed, rms_norm,
+                     unembed)
+from repro.distributed.sharding import residual_barrier, shard_act
+
+
+def init_model_abstract(cfg: ModelConfig):
+    """Allocation-free param tree (ShapeDtypeStruct leaves) + logical axes."""
+    tok = ABSTRACT_INIT.set(True)
+    try:
+        return init_model(cfg, None)
+    finally:
+        ABSTRACT_INIT.reset(tok)
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+
+def init_layer(key, cfg: ModelConfig, idx: int):
+    kind = cfg.layer_kind(idx)
+    b = Builder(key, jnp.dtype(cfg.param_dtype))
+    b.const("ln1", (cfg.d_model,), ("embed",))
+    if kind == "ssm":
+        p, a = ssm_mod.init_ssm(b.key(), cfg)
+        b.child("ssm", p, a)
+    elif cfg.mla:
+        p, a = attn.init_mla(b.key(), cfg)
+        b.child("attn", p, a)
+    else:
+        p, a = attn.init_gqa(b.key(), cfg)
+        b.child("attn", p, a)
+    if cfg.is_encdec:
+        b.const("cross_ln", (cfg.d_model,), ("embed",))
+        p, a = attn.init_cross(b.key(), cfg)
+        b.child("cross", p, a)
+    if cfg.layer_is_moe(idx):
+        b.const("ln2", (cfg.d_model,), ("embed",))
+        p, a = moe_mod.init_moe(b.key(), cfg)
+        b.child("moe", p, a)
+    elif cfg.d_ff > 0:
+        b.const("ln2", (cfg.d_model,), ("embed",))
+        p, a = init_mlp(b.key(), cfg.d_model, cfg.d_ff, cfg.mlp_act,
+                        jnp.dtype(cfg.param_dtype))
+        b.child("mlp", p, a)
+    return b.build()
+
+
+def apply_layer(p, cfg: ModelConfig, idx: int, x, positions, enc_out=None):
+    kind = cfg.layer_kind(idx)
+    x = shard_act(x, "hidden")
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "ssm":
+        h = ssm_mod.apply_ssm(p["ssm"], cfg, h)
+    elif cfg.mla:
+        h = attn.apply_mla(p["attn"], cfg, h, positions)
+    else:
+        h = attn.apply_gqa(p["attn"], cfg, h, positions,
+                           window=cfg.layer_window(idx))
+    x = x + h
+    if cfg.is_encdec and enc_out is not None:
+        h = rms_norm(x, p["cross_ln"], cfg.norm_eps)
+        kv = attn.cross_kv(p["cross"], enc_out)
+        x = x + attn.apply_cross(p["cross"], cfg, h, kv)
+    if "moe" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + moe_mod.apply_moe(p["moe"], cfg, h)
+    elif "mlp" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], h, cfg.mlp_act)
+    return residual_barrier(x)
+
+
+def init_layer_cache(cfg: ModelConfig, idx: int, batch, max_len, dtype):
+    kind = cfg.layer_kind(idx)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    if cfg.mla:
+        return attn.init_mla_cache(cfg, batch, max_len, dtype)
+    return attn.init_gqa_cache(cfg, batch, max_len, dtype,
+                               window=cfg.layer_window(idx))
+
+
+def decode_layer(p, cfg: ModelConfig, idx: int, x, cache, pos, enc_out=None):
+    kind = cfg.layer_kind(idx)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "ssm":
+        h, cache = ssm_mod.decode_ssm(p["ssm"], cfg, h, cache)
+    elif cfg.mla:
+        h, cache = attn.decode_mla(p["attn"], cfg, h, cache, pos)
+    else:
+        h, cache = attn.decode_gqa(p["attn"], cfg, h, cache, pos,
+                                   window=cfg.layer_window(idx))
+    x = x + h
+    if cfg.is_encdec and enc_out is not None:
+        hh = rms_norm(x, p["cross_ln"], cfg.norm_eps)
+        kv = attn.cross_kv(p["cross"], enc_out)
+        x = x + attn.apply_cross(p["cross"], cfg, hh, kv)
+    if "moe" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + moe_mod.apply_moe(p["moe"], cfg, h)
+    elif "mlp" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], h, cfg.mlp_act)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+
+def _regions(cfg: ModelConfig):
+    """(prefix_idxs, n_groups, group_idxs_fn, remainder_idxs)."""
+    pre = list(range(cfg.first_dense))
+    rest = cfg.num_layers - cfg.first_dense
+    g = cfg.scan_group
+    n_groups = rest // g
+    rem_start = cfg.first_dense + n_groups * g
+    rem = list(range(rem_start, cfg.num_layers))
+    return pre, n_groups, rem
+
+
+def init_model(cfg: ModelConfig, key):
+    b = Builder(key, jnp.dtype(cfg.param_dtype))
+    p, a = init_embedding(b.key(), cfg.padded_vocab, cfg.d_model,
+                          jnp.dtype(cfg.param_dtype))
+    b.child("embed", p, a)
+
+    pre, n_groups, rem = _regions(cfg)
+    prefix, prefix_a = [], []
+    for i in pre:
+        pp, aa = init_layer(b.key(), cfg, i)
+        prefix.append(pp)
+        prefix_a.append(aa)
+    b.child("prefix", prefix, prefix_a)
+
+    if n_groups > 0:
+        base = cfg.first_dense
+
+        def init_group(k):
+            ks = (jax.random.split(k, cfg.scan_group)
+                  if k is not None else [None] * cfg.scan_group)
+            ps, aas = [], []
+            for j in range(cfg.scan_group):
+                pp, aa = init_layer(ks[j], cfg, base + j)
+                ps.append(pp)
+                aas.append(aa)
+            return ps, aas
+
+        # axes (and abstract shapes) from one structure-only pass
+        tok = ABSTRACT_INIT.set(True)
+        try:
+            abs_params, group_axes = init_group(None)
+        finally:
+            ABSTRACT_INIT.reset(tok)
+        stack_axes = jax.tree.map(lambda ax: ("stack",) + tuple(ax), group_axes,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        if ABSTRACT_INIT.get():
+            stacked = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_groups,) + s.shape, s.dtype),
+                abs_params)
+        else:
+            keys = jax.random.split(b.key(), n_groups)
+            stacked = jax.vmap(lambda k: init_group(k)[0])(keys)
+        b.child("stack", stacked, stack_axes)
+    else:
+        b.child("stack", None, None)
+
+    rem_p, rem_a = [], []
+    for i in rem:
+        pp, aa = init_layer(b.key(), cfg, i)
+        rem_p.append(pp)
+        rem_a.append(aa)
+    b.child("remainder", rem_p, rem_a)
+
+    b.const("final_norm", (cfg.d_model,), ("embed",))
+    if not cfg.tie_embeddings:
+        p, a = init_unembed(b.key(), cfg.d_model, cfg.padded_vocab,
+                            jnp.dtype(cfg.param_dtype))
+        b.child("unembed", p, a)
+
+    if cfg.is_encdec:
+        enc_layers, enc_axes = [], []
+        for i in range(cfg.enc_layers):
+            bb = Builder(b.key(), jnp.dtype(cfg.param_dtype))
+            bb.const("ln1", (cfg.d_model,), ("embed",))
+            pp, aa = attn.init_gqa(bb.key(), cfg)
+            bb.child("attn", pp, aa)
+            bb.const("ln2", (cfg.d_model,), ("embed",))
+            pp, aa = init_mlp(bb.key(), cfg.d_model, cfg.d_ff, cfg.mlp_act,
+                              jnp.dtype(cfg.param_dtype))
+            bb.child("mlp", pp, aa)
+            lp, la = bb.build()
+            enc_layers.append(lp)
+            enc_axes.append(la)
+        b.child("encoder", enc_layers, enc_axes)
+        b.const("enc_final_norm", (cfg.d_model,), ("embed",))
+    return b.build()
+
+
+def _apply_encoder(params, cfg, enc_embeds):
+    x = enc_embeds
+    positions = jnp.arange(x.shape[1])[None, :]
+    for lp in params["encoder"]:
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + attn.apply_bidir(lp["attn"], cfg, h, positions)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + apply_mlp(lp["mlp"], h, cfg.mlp_act)
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _stack_scan(params, cfg, x, positions, enc_out, remat=True):
+    """Scan over stacked layer groups."""
+    base = cfg.first_dense
+
+    def group_body(carry, group_params):
+        h = carry
+        for j in range(cfg.scan_group):
+            h = apply_layer(group_params[j], cfg, base + j, h, positions, enc_out)
+        return h, None
+
+    body = jax.checkpoint(group_body) if (remat and cfg.remat) else group_body
+    x, _ = jax.lax.scan(body, x, params["stack"])
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
+            enc_embeds=None):
+    """Train/prefill forward pass -> final hidden states [B, S, d]."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = shard_act(embed_tokens(params["embed"], tokens, dtype), "hidden")
+    if frontend_embeds is not None:
+        # modality stub: frontend embeddings overwrite the leading positions
+        n = frontend_embeds.shape[1]
+        x = jnp.concatenate([frontend_embeds.astype(dtype), x[:, n:]], axis=1)
+    enc_out = None
+    if cfg.is_encdec:
+        assert enc_embeds is not None
+        enc_out = _apply_encoder(params, cfg, enc_embeds.astype(dtype))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    for i, lp in zip(range(cfg.first_dense), params["prefix"]):
+        x = apply_layer(lp, cfg, i, x, positions, enc_out)
+    if params["stack"] is not None:
+        x = _stack_scan(params, cfg, x, positions, enc_out)
+    pre, n_groups, rem = _regions(cfg)
+    for i, lp in zip(rem, params["remainder"]):
+        x = apply_layer(lp, cfg, i, x, positions, enc_out)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def logits_from_hidden(params, cfg, hidden):
+    out = params["unembed"]["out"] if not cfg.tie_embeddings else params["embed"]["tok"].T
+    logits = unembed(out, hidden)
+    if cfg.padded_vocab != cfg.vocab:
+        # mask the padding columns (never predicted, zero softmax mass)
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+    return shard_act(logits, "logits")
+
+
+# ---------------------------------------------------------------------------
+# Decode
+
+def init_cache(cfg: ModelConfig, batch, max_len, dtype):
+    pre, n_groups, rem = _regions(cfg)
+    base = cfg.first_dense
+    prefix = [init_layer_cache(cfg, i, batch, max_len, dtype) for i in pre]
+    stack = None
+    if n_groups > 0:
+        def one(j):
+            return init_layer_cache(cfg, base + j, batch, max_len, dtype)
+        per_pos = [one(j) for j in range(cfg.scan_group)]
+        stack = jax.tree.map(
+            lambda c: jnp.broadcast_to(c, (n_groups,) + c.shape).copy(), per_pos)
+    remainder = [init_layer_cache(cfg, i, batch, max_len, dtype) for i in rem]
+    return {"prefix": prefix, "stack": stack, "remainder": remainder}
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos, enc_out=None):
+    """token: [B, 1] int32; pos: scalar int32. Returns (logits, new_cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_tokens(params["embed"], token, dtype)
+    pre, n_groups, rem = _regions(cfg)
+    base = cfg.first_dense
+
+    new_prefix = []
+    for i, lp, c in zip(pre, params["prefix"], cache["prefix"]):
+        x, c = decode_layer(lp, cfg, i, x, c, pos, enc_out)
+        new_prefix.append(c)
+
+    new_stack = cache["stack"]
+    if params["stack"] is not None:
+        def group_body(carry, scanned):
+            h = carry
+            gp, gc = scanned
+            new_gc = []
+            for j in range(cfg.scan_group):
+                h, cj = decode_layer(gp[j], cfg, base + j, h, gc[j], pos, enc_out)
+                new_gc.append(cj)
+            return h, new_gc
+
+        x, new_stack = jax.lax.scan(group_body, x,
+                                    (params["stack"], cache["stack"]))
+
+    new_rem = []
+    for i, lp, c in zip(rem, params["remainder"], cache["remainder"]):
+        x, c = decode_layer(lp, cfg, i, x, c, pos, enc_out)
+        new_rem.append(c)
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, h)
+    return logits, {"prefix": new_prefix, "stack": new_stack,
+                    "remainder": new_rem}

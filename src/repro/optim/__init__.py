@@ -1,0 +1,5 @@
+from .adamw import adamw_init, adamw_update, OptState
+from .quantized import quantize_q8, dequantize_q8, Q8
+
+__all__ = ["adamw_init", "adamw_update", "OptState",
+           "quantize_q8", "dequantize_q8", "Q8"]

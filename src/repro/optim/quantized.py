@@ -1,0 +1,66 @@
+"""Block-quantized (int8 + f32 scale) tensor storage.
+
+The paper's thesis — move/store the minimum acceptable bytes per word —
+applied to optimizer state and gradient collectives: Adam moments and
+cross-pod gradient payloads are stored as int8 with one f32 scale per
+128-element block of the trailing dimension (symmetric absmax scaling).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+class Q8(NamedTuple):
+    q: jax.Array        # int8 payload, original shape
+    scale: jax.Array    # f32, shape [..., ceil(last/BLOCK)]
+
+
+def _pad_to_block(x):
+    last = x.shape[-1]
+    pad = (-last) % BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, pad
+
+
+def quantize_q8(x: jax.Array) -> Q8:
+    orig_last = x.shape[-1]
+    xp, pad = _pad_to_block(x.astype(jnp.float32))
+    blocks = xp.reshape(*xp.shape[:-1], -1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / safe[..., None]), -127, 127).astype(jnp.int8)
+    q = q.reshape(*xp.shape[:-1], -1)[..., :orig_last]
+    return Q8(q, scale)
+
+
+def dequantize_q8(t: Q8, dtype=jnp.float32) -> jax.Array:
+    q = t.q.astype(jnp.float32)
+    orig_last = q.shape[-1]
+    qp, pad = _pad_to_block(q)
+    blocks = qp.reshape(*qp.shape[:-1], -1, BLOCK)
+    out = blocks * t.scale[..., None]
+    return out.reshape(*qp.shape[:-1], -1)[..., :orig_last].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fourth-root coding for non-negative second moments.
+#
+# Linear int8 flushes small v entries in a block to 0, which explodes the
+# Adam update m/(sqrt(v)+eps).  Quantizing u = v^(1/4) compresses the
+# dynamic range (a 1e8 spread in v becomes 1e2 in u), bounding the
+# relative error of sqrt(v) at ~2/127 per block — the same trick as
+# dynamic-code 8-bit Adam, in closed form.
+
+def quantize_q8_root4(v: jax.Array) -> Q8:
+    return quantize_q8(jnp.sqrt(jnp.sqrt(jnp.maximum(v, 0.0))))
+
+
+def dequantize_q8_root4(t: Q8, dtype=jnp.float32) -> jax.Array:
+    u = dequantize_q8(t, jnp.float32)
+    return jnp.square(jnp.square(u)).astype(dtype)

@@ -1,0 +1,11 @@
+"""Shared test config.
+
+x64 is enabled globally: the Cholesky core is an FP64 algorithm (paper
+baseline).  Model smoke configs pin their own dtypes explicitly, so they
+are unaffected.  Note: NO xla_force_host_platform_device_count here —
+tests see the real single CPU device; multi-device tests spawn
+subprocesses (see tests/test_distributed.py).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,96 @@
+"""Per-kernel validation: Pallas (interpret mode) vs the pure-jnp oracle,
+swept over shapes and dtypes."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+SHAPES = [64, 128, 256, 384]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _spd(n, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, n)).astype(np.float32) / np.sqrt(n)
+    a = x @ x.T + 2.0 * np.eye(n, dtype=np.float32)
+    return jnp.asarray(a, dtype=dtype)
+
+
+def _mat(n, dtype, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, n)).astype(np.float32),
+                       dtype=dtype)
+
+
+def _tol(dtype):
+    return {"float32": 2e-4, "bfloat16": 6e-2}[jnp.dtype(dtype).name]
+
+
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_potrf(n, dtype):
+    a = _spd(n, dtype)
+    got = np.asarray(ops.potrf(a, interpret=True), np.float64)
+    want = np.asarray(ref.potrf_ref(a.astype(jnp.float32)), np.float64)
+    np.testing.assert_allclose(np.tril(got), np.tril(want),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_trsm(n, dtype):
+    l = jnp.asarray(np.asarray(
+        ref.potrf_ref(_spd(n, jnp.float32))), dtype=dtype)
+    c = _mat(n, dtype)
+    got = np.asarray(ops.trsm(l, c, interpret=True), np.float64)
+    want = np.asarray(ref.trsm_ref(l.astype(jnp.float32),
+                                   c.astype(jnp.float32)), np.float64)
+    np.testing.assert_allclose(got, want, atol=20 * _tol(dtype),
+                               rtol=20 * _tol(dtype))
+
+
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_syrk(n, dtype):
+    c, a = _spd(n, dtype), _mat(n, dtype)
+    got = np.asarray(ops.syrk_update(c, a, interpret=True), np.float64)
+    want = np.asarray(ref.syrk_update_ref(c.astype(jnp.float32),
+                                          a.astype(jnp.float32)), np.float64)
+    np.testing.assert_allclose(got, want, atol=n * _tol(dtype) / 16,
+                               rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gemm(n, dtype):
+    c, a, b = _spd(n, dtype), _mat(n, dtype), _mat(n, dtype, seed=7)
+    got = np.asarray(ops.gemm_update(c, a, b, interpret=True), np.float64)
+    want = np.asarray(ref.gemm_update_ref(
+        c.astype(jnp.float32), a.astype(jnp.float32),
+        b.astype(jnp.float32)), np.float64)
+    np.testing.assert_allclose(got, want, atol=n * _tol(dtype) / 16,
+                               rtol=_tol(dtype))
+
+
+def test_gemm_fp8_inputs():
+    """fp8-e4m3 operands accumulate in f32 (MxP tile contract)."""
+    n = 128
+    a = _mat(n, jnp.float8_e4m3fn)
+    b = _mat(n, jnp.float8_e4m3fn, seed=5)
+    c = _spd(n, jnp.float32)
+    got = ops.gemm_update(c, a.astype(jnp.float32), b.astype(jnp.float32),
+                          interpret=True)
+    want = c - a.astype(jnp.float32) @ b.astype(jnp.float32).T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_f64_dispatches_to_xla():
+    """f64 tiles must take the stock XLA path (no f64 MXU on TPU)."""
+    a = _spd(128, jnp.float64)
+    got = ops.potrf(a)
+    want = jnp.linalg.cholesky(a)
+    np.testing.assert_allclose(np.asarray(jnp.tril(got)), np.asarray(want),
+                               atol=1e-12)

@@ -1,0 +1,104 @@
+"""Higham-Mary per-tile precision assignment (paper §IV-C, Fig. 4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.precision import (EPS, LADDERS, assign_precision, tile_norms,
+                                  uniform_plan)
+
+
+def _norms(nt, decay=1e-4, seed=0):
+    rng = np.random.default_rng(seed)
+    n = np.abs(rng.standard_normal((nt, nt)))
+    for j in range(nt):
+        for i in range(j, nt):
+            n[i, j] *= decay ** abs(i - j)
+    n[np.diag_indices(nt)] = 10.0
+    return n, float(np.sqrt((n ** 2).sum()))
+
+
+def test_diagonal_pinned_high():
+    norms, total = _norms(6)
+    plan = assign_precision(norms, total, 1e-6)
+    for k in range(6):
+        assert plan.classes[k, k] == 0
+
+
+def test_monotone_in_eps():
+    """Tighter eps_target never lowers any tile's precision."""
+    norms, total = _norms(8)
+    loose = assign_precision(norms, total, 1e-4).classes
+    tight = assign_precision(norms, total, 1e-10).classes
+    assert (tight <= loose).all()
+
+
+def test_monotone_in_norm():
+    """A tile with smaller relative norm never gets higher precision."""
+    norms, total = _norms(8)
+    plan = assign_precision(norms, total, 1e-6)
+    nt = 8
+    for j in range(nt):
+        for i in range(j + 1, nt):
+            for i2 in range(j + 1, nt):
+                if norms[i, j] < norms[i2, j]:
+                    assert plan.classes[i, j] >= plan.classes[i2, j] or \
+                        norms[i, j] == norms[i2, j]
+
+
+def test_distance_decay_uses_low_precision():
+    """Strong off-diagonal decay must produce some sub-f32 tiles
+    (the spatial-statistics structure the paper harvests, Fig. 4)."""
+    norms, total = _norms(12, decay=1e-6)
+    plan = assign_precision(norms, total, 1e-5)
+    hist = plan.histogram()
+    assert hist["bf16"] + hist["f8e4m3"] > 0
+
+
+def test_gpu_ladder_matches_paper():
+    assert LADDERS["gpu"] == ("f64", "f32", "f16", "f8e4m3")
+    assert LADDERS["tpu"] == ("f64", "f32", "bf16", "f8e4m3")
+
+
+def test_uniform_plan():
+    plan = uniform_plan(5, "f64")
+    assert (plan.classes == 0).all()
+    assert plan.histogram()["f64"] == 15  # lower triangle of 5x5
+
+
+def test_criterion_boundary():
+    """A tile exactly at the threshold takes the lower precision."""
+    nt = 2
+    norms = np.ones((nt, nt))
+    eps = 1e-6
+    # pick ||A|| so that n*norm/total == eps/eps_f32 exactly
+    total = nt * 1.0 / (eps / EPS["f32"])
+    plan = assign_precision(norms, total, eps)
+    assert plan.ladder[plan.classes[1, 0]] in ("f32", "bf16", "f8e4m3")
+
+
+@settings(max_examples=20, deadline=None)
+@given(nt=st.integers(2, 10), seed=st.integers(0, 99),
+       eps=st.sampled_from([1e-4, 1e-6, 1e-8]))
+def test_property_assignment_valid(nt, seed, eps):
+    norms, total = _norms(nt, seed=seed)
+    plan = assign_precision(norms, total, eps)
+    assert plan.classes.min() >= 0
+    assert plan.classes.max() < len(plan.ladder)
+    # criterion actually holds for every demoted tile
+    for j in range(nt):
+        n_col = nt - j
+        for i in range(j + 1, nt):
+            c = plan.classes[i, j]
+            if c > 0:
+                ratio = n_col * norms[i, j] / total
+                assert ratio <= eps / EPS[plan.ladder[c]] + 1e-12
+
+
+def test_tile_norms_symmetric_weighting():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((64, 64))
+    a = x @ x.T + 64 * np.eye(64)
+    from repro.core.tiling import to_tiles
+    tiles = to_tiles(a, 16)
+    norms, total = tile_norms(tiles)
+    assert abs(total - np.linalg.norm(a)) / np.linalg.norm(a) < 1e-12

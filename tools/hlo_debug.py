@@ -1,0 +1,92 @@
+"""Debug: per-computation FLOP/byte/collective breakdown of one cell.
+
+Usage: PYTHONPATH=src python tools/hlo_debug.py <arch> <shape> [multi]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+import collections
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, SHAPES
+from repro.launch import specs as S, hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_train_step, make_prefill_step, make_serve_step
+from repro.distributed.sharding import activation_sharding
+
+
+def compile_cell(arch, shape_name, multi=False, accum_steps=1):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi)
+    params_abs, p_sh, opt_abs, opt_sh = S.train_state_shardings(cfg, mesh)
+    batch_abs = S.input_specs(cfg, shape)
+    batch_sh = S.batch_shardings(cfg, shape, mesh)
+    rep = NamedSharding(mesh, P())
+    with mesh, activation_sharding(mesh, seq_sharded=shape.name == "long_500k"):
+        if shape.kind == "train":
+            step = make_train_step(cfg, accum_steps=accum_steps)
+            jitted = jax.jit(step, in_shardings=(p_sh, opt_sh, batch_sh),
+                             out_shardings=(p_sh, opt_sh,
+                                            {"loss": rep, "grad_norm": rep}),
+                             donate_argnums=(0, 1))
+            return jitted.lower(params_abs, opt_abs, batch_abs).compile()
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, batch_sh))
+            return jitted.lower(params_abs, batch_abs).compile()
+        else:
+            cache_abs = S.abstract_cache(cfg, shape.global_batch,
+                                         shape.seq_len, jnp.dtype(cfg.dtype))
+            cache_sh = S.cache_shardings(cfg, cache_abs, mesh,
+                                         seq_sharded=shape.name == "long_500k")
+            serve = make_serve_step(cfg)
+            if cfg.is_encdec:
+                fn = lambda p, c, t, pos, enc: serve(p, c, t, pos, enc_out=enc)
+                args = (params_abs, cache_abs, batch_abs["token"],
+                        batch_abs["pos"], batch_abs["enc_out"])
+                in_sh = (p_sh, cache_sh, batch_sh["token"], batch_sh["pos"],
+                         batch_sh["enc_out"])
+            else:
+                fn = lambda p, c, t, pos: serve(p, c, t, pos)
+                args = (params_abs, cache_abs, batch_abs["token"],
+                        batch_abs["pos"])
+                in_sh = (p_sh, cache_sh, batch_sh["token"], batch_sh["pos"])
+            jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=(1,))
+            return jitted.lower(*args).compile()
+
+
+def report(text, top=20):
+    parsed = hlo.parse_hlo(text)
+    mult, fused = hlo._call_multipliers(parsed)
+    dots = []
+    by_comp = collections.Counter()
+    for name, comp in parsed["comps"].items():
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                fl = m * hlo._dot_flops(op, comp)
+                dots.append((fl, m, name, op.result_type, op.operands[:2]))
+                by_comp[name] += fl
+    dots.sort(reverse=True)
+    total = sum(d[0] for d in dots)
+    print(f"total dot flops {total:.4e}   (over {len(dots)} dots)")
+    print("\n-- top dots --")
+    for fl, m, name, rt, ops in dots[:top]:
+        print(f"{fl:10.3e} m={m:6.0f} {name[:40]:40s} {rt[:40]:40s} {ops}")
+    print("\n-- by computation --")
+    for name, fl in by_comp.most_common(12):
+        print(f"{fl:10.3e} m={mult.get(name, 0):6.0f} {name[:60]}")
+
+
+if __name__ == "__main__":
+    arch, shape = sys.argv[1], sys.argv[2]
+    multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+    compiled = compile_cell(arch, shape, multi)
+    report(compiled.as_text())
