@@ -2,16 +2,25 @@
 
 Measured: the shard_map left-looking factorization on 1/2/4/8 host
 devices (subprocess; correctness asserted against LAPACK).  Modeled:
-panel-broadcast collective volume vs compute across device counts on the
-paper's platforms (the scaling-slope argument of Fig. 9).
+event simulation of the *same static multi-device op streams* the
+executors replay (`build_multidevice_schedule` + `simulate_multi`) on
+the paper's platforms — per-device H2D/D2H/compute engines plus the
+shared interconnect carrying the panel-row broadcast.  The qualitative
+Fig. 9 claim is the interconnect story: the faster link (NVLink-C2C on
+GH200) keeps parallel compute efficiency high where the PCIe-class
+platforms drown in broadcast traffic.
 """
+import os
+import pathlib
 import subprocess
 import sys
 import textwrap
-import time
 
 from repro.core.analytics import HW
-from repro.core.distributed import panel_broadcast_bytes
+from repro.core.distributed import modeled_scaling, panel_broadcast_bytes
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+_SRC = _REPO_ROOT / "src"
 
 
 def _measure(devices: int, n: int, tb: int) -> float:
@@ -30,18 +39,18 @@ def _measure(devices: int, n: int, tb: int) -> float:
         assert err < 1e-10, err
         print('TIME', dt)
     """)
-    import os
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = "src"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(_SRC)] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
     p = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=900, env=env, cwd="/root/repo")
+                       text=True, timeout=900, env=env, cwd=str(_REPO_ROOT))
     assert p.returncode == 0, p.stderr[-2000:]
     return float(p.stdout.split("TIME")[1])
 
 
 def run(out):
-    out("== Fig. 9: multi-device scaling (1D block-cyclic, shard_map) ==")
+    out("== Fig. 9: multi-device scaling (1D block-cyclic) ==")
     n, tb = 512, 32
     out(f"[measured, host devices] matrix {n}x{n}, tile {tb} "
         f"(CPU wall-clock; correctness asserted)")
@@ -49,18 +58,29 @@ def run(out):
         dt = _measure(d, n, tb)
         out(f"  {d} device(s): {dt*1e3:8.1f} ms")
 
-    out("[modeled] panel-broadcast volume vs compute, f64, n=131072 "
-        f"tb=1024:")
-    nt = 128
-    flops = (nt * 1024) ** 3 / 3
-    for hw_name in ("a100-pcie", "gh200", "tpu-v5e"):
+    nt, tbm = 32, 1024
+    out(f"[modeled] static per-device op streams, f64 V3, "
+        f"n={nt*tbm} tb={tbm} (simulate_multi; exact schedule replay):")
+    eff4 = {}
+    for hw_name in ("a100-pcie", "gh200"):
         hw = HW[hw_name]
-        out(f"  {hw_name}:")
-        for p in (1, 2, 4):
-            coll = panel_broadcast_bytes(nt, 1024, p)
-            t_comp = flops / p / hw.flops["f64"]
-            t_coll = coll / p / hw.h2d_bw
-            eff = t_comp / (t_comp + t_coll)
-            out(f"    {p} GPU(s): compute {t_comp:6.1f}s  "
-                f"bcast {t_coll:6.2f}s  parallel efficiency {eff*100:5.1f}%")
+        out(f"  {hw_name} (link {hw.h2d_bw/1e9:.0f} GB/s):")
+        for row in modeled_scaling(nt, tbm, ndevs=(1, 2, 4),
+                                   hw_name=hw_name):
+            out(f"    {row['ndev']} device(s): makespan {row['makespan']:7.3f}s"
+                f"  {row['tflops']:6.1f} TFlop/s"
+                f"  speedup {row['speedup']:4.2f}"
+                f"  compute-eff {row['compute_efficiency']*100:5.1f}%"
+                f"  bcast {row['bcast_bytes']/1e9:6.2f} GB")
+            if row["ndev"] == 4:
+                eff4[hw_name] = row
+    g4, a4 = eff4["gh200"], eff4["a100-pcie"]
+    out(f"  => 4-device compute efficiency: gh200 "
+        f"{g4['compute_efficiency']*100:.1f}% vs a100-pcie "
+        f"{a4['compute_efficiency']*100:.1f}% — the faster interconnect "
+        f"keeps the scaling slope (paper Fig. 9)")
+
+    out("[analytic] panel-broadcast volume (matches the schedules exactly):")
+    for p in (2, 4):
+        out(f"  {p} device(s): {panel_broadcast_bytes(nt, tbm, p)/1e9:.2f} GB")
     out("")

@@ -3,15 +3,18 @@
 For a sweep of matrix sizes, prints the exact data-movement volume of
 every policy (Fig. 8) and the modeled makespan/TFlop/s on the paper's
 three platforms plus the TPU v5e target (Fig. 6), including the
-cudaMalloc-overhead effect that makes naive async lose to V1.
+cudaMalloc-overhead effect that makes naive async lose to V1.  Closes
+with the multi-device extension (Fig. 5/9): per-device op streams with
+the panel-row broadcast on a shared interconnect.
 """
 import numpy as np
 
 import jax
 jax.config.update("jax_enable_x64", True)
 
-from repro.core.analytics import HW, ascii_trace, simulate, volume_report
-from repro.core.schedule import build_schedule
+from repro.core.analytics import (HW, ascii_trace, simulate, simulate_multi,
+                                  volume_report, volume_report_multi)
+from repro.core.schedule import build_multidevice_schedule, build_schedule
 
 POLICIES = ["sync", "async", "v1", "v2", "v3"]
 NT = 16          # 16x16 tiles
@@ -45,6 +48,18 @@ def main():
     print("\nFig.7-style trace, GH200, sync:")
     r = simulate(scheds["sync"], HW["gh200"], record_timeline=True)
     print(ascii_trace(r))
+
+    print("\n--- multi-device V3 (1D block-cyclic, Fig. 5/9) ---")
+    print(f"{'ndev':>4s} {'per-dev C2G GB':>15s} {'bcast GB':>9s} "
+          f"{'gh200 eff':>10s} {'a100 eff':>9s}")
+    for ndev in (1, 2, 4):
+        ms = build_multidevice_schedule(NT, TB, ndev, "v3")
+        rep = volume_report_multi(ms)
+        effs = {hw: simulate_multi(ms, HW[hw]).compute_efficiency
+                for hw in ("gh200", "a100-pcie")}
+        print(f"{ndev:4d} {rep['per_device'][0]['c2g_bytes']/1e9:15.2f} "
+              f"{rep['bcast_bytes']/1e9:9.2f} {effs['gh200']*100:9.1f}% "
+              f"{effs['a100-pcie']*100:8.1f}%")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,13 @@ timeline (Fig. 2/7): ``sync`` serializes everything on one engine, the
 ``async``/V* policies let the engines run concurrently subject to the data
 dependencies encoded in the slot indices.
 
+:func:`simulate_multi` extends the same model to the multi-device op
+streams of :func:`~repro.core.schedule.build_multidevice_schedule`: every
+device gets its own H2D/D2H/compute engine triple, and the per-column
+panel-row broadcast (BCAST/RECV pairs) rides one *shared* interconnect
+engine whose bandwidth defaults to the preset's link speed — this is what
+separates the PCIe-switch platforms from NVLink-C2C in Fig. 9.
+
 Hardware presets carry published peak numbers; they parameterize the model
 only — nothing here measures real hardware (this repo targets TPU; CPU CI).
 """
@@ -15,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from .schedule import OpKind, Schedule
+from .schedule import MultiDeviceSchedule, OpKind, Schedule
 
 GB = 1e9
 TFLOP = 1e12
@@ -97,6 +104,7 @@ def simulate(sched: Schedule, hw: HardwareModel, record_timeline: bool = False) 
 
     nslots = max(max(o.slot_c, o.slot_a, o.slot_b) for o in sched.ops) + 1
     ready = [0.0] * nslots        # time the slot's contents become valid
+    reads = [0.0] * nslots        # time the slot's pending reads complete
     t_h2d = t_d2h = t_cmp = 0.0   # engine-free times
     busy = {"h2d": 0.0, "d2h": 0.0, "cmp": 0.0}
     nbytes = {"h2d": 0, "d2h": 0}
@@ -115,16 +123,22 @@ def simulate(sched: Schedule, hw: HardwareModel, record_timeline: bool = False) 
         if op.kind is OpKind.ALLOC:
             allocs += 1
             t_cmp += hw.alloc_overhead  # cudaMalloc stalls the stream
+            # a fresh buffer: the recycled slot id carries no hazards
+            reads[op.slot_c] = ready[op.slot_c] = 0.0
         elif op.kind is OpKind.FREE:
             t_cmp += hw.alloc_overhead * 0.3
         elif op.kind is OpKind.LOAD:
             dur = op.bytes / hw.h2d_bw
             nbytes["h2d"] += op.bytes
+            # a LOAD overwrites the slot: it must wait for pending reads
+            # (WAR — e.g. a STORE still draining the slot) and for any
+            # in-flight write of the previous contents (WAW)
+            dep = max(reads[op.slot_c], ready[op.slot_c])
             if overlap:
-                t_h2d = run_on(t_h2d, 0.0, dur, "h2d", f"L{op.i},{op.j}")
+                t_h2d = run_on(t_h2d, dep, dur, "h2d", f"L{op.i},{op.j}")
                 ready[op.slot_c] = t_h2d
             else:
-                t_cmp = run_on(t_cmp, 0.0, dur, "h2d", f"L{op.i},{op.j}")
+                t_cmp = run_on(t_cmp, dep, dur, "h2d", f"L{op.i},{op.j}")
                 t_h2d = t_cmp
                 ready[op.slot_c] = t_cmp
         elif op.kind is OpKind.STORE:
@@ -132,16 +146,23 @@ def simulate(sched: Schedule, hw: HardwareModel, record_timeline: bool = False) 
             nbytes["d2h"] += op.bytes
             if overlap:
                 t_d2h = run_on(t_d2h, ready[op.slot_c], dur, "d2h", f"S{op.i},{op.j}")
+                end = t_d2h
             else:
                 t_cmp = run_on(t_cmp, ready[op.slot_c], dur, "d2h", f"S{op.i},{op.j}")
                 t_d2h = t_cmp
+                end = t_cmp
+            reads[op.slot_c] = max(reads[op.slot_c], end)
         else:  # compute
             flops = _TASK_FLOPS[op.kind](tb)
             rate = hw.flops[lad[op.cls]]
             dur = flops / rate + hw.launch_overhead
             deps = [ready[s] for s in (op.slot_c, op.slot_a, op.slot_b) if s >= 0]
+            deps.append(reads[op.slot_c])   # WAR: output slot still being read
             t_cmp = run_on(t_cmp, max(deps), dur, "cmp", op.kind.value)
             ready[op.slot_c] = t_cmp
+            for s in (op.slot_a, op.slot_b):
+                if s >= 0 and s != op.slot_c:
+                    reads[s] = max(reads[s], t_cmp)
 
     makespan = max(t_h2d, t_d2h, t_cmp)
     return SimResult(
@@ -168,6 +189,199 @@ def volume_report(sched: Schedule) -> dict:
         "evictions": sched.evictions,
         "allocs": sched.count(OpKind.ALLOC),
         "matrix_bytes": 8 * (sched.nt * sched.tb) ** 2,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Multi-device event simulation (paper Fig. 9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeviceSimStats:
+    compute_busy: float
+    h2d_busy: float
+    d2h_busy: float
+    h2d_bytes: int
+    d2h_bytes: int
+    recv_bytes: int
+    finish: float          # when this device's last engine goes idle
+
+
+@dataclasses.dataclass
+class MultiSimResult:
+    makespan: float
+    devices: list          # DeviceSimStats per device
+    link_busy: float
+    link_bytes: int
+    flops_useful: float
+    timeline: list         # (engine, start, end, label); engine "d<k>:h2d" etc.
+
+    @property
+    def tflops(self) -> float:
+        return self.flops_useful / self.makespan / TFLOP
+
+    @property
+    def compute_efficiency(self) -> float:
+        """Fraction of the run the compute engines are busy, averaged over
+        devices — the Fig. 9 scaling metric (1.0 = perfect overlap of the
+        broadcast and OOC traffic behind compute)."""
+        busy = sum(d.compute_busy for d in self.devices)
+        return busy / (len(self.devices) * self.makespan)
+
+
+def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
+                   link_bw: float | None = None,
+                   record_timeline: bool = False) -> MultiSimResult:
+    """Event simulation of the per-device op streams + shared interconnect.
+
+    Every device runs the same three-engine model as :func:`simulate`
+    (its own H2D/D2H/compute engines, slot RAW/WAR tracking); the
+    panel-row broadcast rides one *shared* link engine of bandwidth
+    ``link_bw`` (default ``hw.h2d_bw``: PCIe-switch platforms share a slow
+    link, NVLink-C2C a fast one).  The broadcast is staged through the
+    owner's host-coherent copy, so each RECV waits for the owner's STORE
+    of that tile to have completed, then occupies the link for its own
+    ingress bytes — a P-1-copy collective on a shared medium.
+
+    Streams are replayed column-by-column, the column owner first, which
+    is exactly the partial order the BCAST/RECV edges impose.
+    """
+    if link_bw is None:
+        link_bw = hw.h2d_bw
+    tb, lad, ndev = msched.tb, msched.plan.ladder, msched.ndev
+    overlap = msched.policy != "sync"
+
+    def _nslots(stream):
+        return max((max(o.slot_c, o.slot_a, o.slot_b) for o in stream),
+                   default=-1) + 1
+
+    ready = [[0.0] * _nslots(s) for s in msched.streams]
+    reads = [[0.0] * _nslots(s) for s in msched.streams]
+    host_ready = {}
+    t_h2d = [0.0] * ndev
+    t_d2h = [0.0] * ndev
+    t_cmp = [0.0] * ndev
+    t_link = 0.0
+    busy = [{"h2d": 0.0, "d2h": 0.0, "cmp": 0.0} for _ in range(ndev)]
+    nbytes = [{"h2d": 0, "d2h": 0, "recv": 0} for _ in range(ndev)]
+    link_busy = 0.0
+    link_bytes = 0
+    timeline = []
+
+    def span(engine, start, end, label):
+        if record_timeline:
+            timeline.append((engine, start, end, label))
+
+    def run_op(d, op):
+        nonlocal t_link, link_busy, link_bytes
+        if op.kind is OpKind.LOAD:
+            dur = op.bytes / hw.h2d_bw
+            nbytes[d]["h2d"] += op.bytes
+            dep = max(reads[d][op.slot_c], ready[d][op.slot_c])
+            if overlap:
+                start = max(t_h2d[d], dep)
+                t_h2d[d] = start + dur
+                end = t_h2d[d]
+            else:
+                start = max(t_cmp[d], dep)
+                t_cmp[d] = start + dur
+                t_h2d[d] = end = t_cmp[d]
+            busy[d]["h2d"] += dur
+            ready[d][op.slot_c] = end
+            span(f"d{d}:h2d", start, end, f"L{op.i},{op.j}")
+        elif op.kind is OpKind.STORE:
+            dur = op.bytes / hw.d2h_bw
+            nbytes[d]["d2h"] += op.bytes
+            dep = ready[d][op.slot_c]
+            if overlap:
+                start = max(t_d2h[d], dep)
+                t_d2h[d] = start + dur
+                end = t_d2h[d]
+            else:
+                start = max(t_cmp[d], dep)
+                t_cmp[d] = start + dur
+                t_d2h[d] = end = t_cmp[d]
+            busy[d]["d2h"] += dur
+            reads[d][op.slot_c] = max(reads[d][op.slot_c], end)
+            host_ready[(op.i, op.j)] = end
+            span(f"d{d}:d2h", start, end, f"S{op.i},{op.j}")
+        elif op.kind is OpKind.BCAST:
+            pass    # availability tracked via host_ready; RECVs carry cost
+        elif op.kind is OpKind.RECV:
+            dur = op.bytes / link_bw
+            nbytes[d]["recv"] += op.bytes
+            link_bytes += op.bytes
+            dep = max(host_ready.get((op.i, op.j), 0.0),
+                      reads[d][op.slot_c], ready[d][op.slot_c])
+            if not overlap:
+                dep = max(dep, t_cmp[d])   # sync: one engine per device
+            start = max(t_link, dep)
+            t_link = start + dur
+            link_busy += dur
+            if not overlap:
+                t_cmp[d] = t_link
+            ready[d][op.slot_c] = t_link
+            span("link", start, t_link, f"B{op.i},{op.j}->d{d}")
+        else:  # compute
+            flops = _TASK_FLOPS[op.kind](tb)
+            dur = flops / hw.flops[lad[op.cls]] + hw.launch_overhead
+            deps = [ready[d][s]
+                    for s in (op.slot_c, op.slot_a, op.slot_b) if s >= 0]
+            deps.append(reads[d][op.slot_c])
+            start = max(t_cmp[d], max(deps))
+            t_cmp[d] = start + dur
+            busy[d]["cmp"] += dur
+            ready[d][op.slot_c] = t_cmp[d]
+            for s in (op.slot_a, op.slot_b):
+                if s >= 0 and s != op.slot_c:
+                    reads[d][s] = max(reads[d][s], t_cmp[d])
+            span(f"d{d}:cmp", start, t_cmp[d], op.kind.value)
+
+    # replay column-by-column, owner first (the BCAST->RECV partial order)
+    for d, op in msched.iter_column_order():
+        run_op(d, op)
+
+    devices = [
+        DeviceSimStats(
+            compute_busy=busy[d]["cmp"], h2d_busy=busy[d]["h2d"],
+            d2h_busy=busy[d]["d2h"], h2d_bytes=nbytes[d]["h2d"],
+            d2h_bytes=nbytes[d]["d2h"], recv_bytes=nbytes[d]["recv"],
+            finish=max(t_h2d[d], t_d2h[d], t_cmp[d]))
+        for d in range(ndev)
+    ]
+    makespan = max([t_link] + [dv.finish for dv in devices])
+    return MultiSimResult(
+        makespan=makespan, devices=devices,
+        link_busy=link_busy, link_bytes=link_bytes,
+        flops_useful=msched.flops(), timeline=timeline,
+    )
+
+
+def volume_report_multi(msched: MultiDeviceSchedule) -> dict:
+    """Per-device + aggregate byte volumes of a multi-device schedule."""
+    per_device = []
+    for d in range(msched.ndev):
+        per_device.append({
+            "device": d,
+            "c2g_bytes": msched.loads_bytes(d),
+            "g2c_bytes": msched.stores_bytes(d),
+            "recv_bytes": sum(o.bytes for o in msched.streams[d]
+                              if o.kind is OpKind.RECV),
+            "loads": msched.count(OpKind.LOAD, d),
+            "stores": msched.count(OpKind.STORE, d),
+            "cache_hits": msched.hits[d] if msched.hits else 0,
+            "evictions": msched.evictions[d] if msched.evictions else 0,
+        })
+    return {
+        "policy": msched.policy,
+        "nt": msched.nt,
+        "tb": msched.tb,
+        "ndev": msched.ndev,
+        "c2g_bytes": msched.loads_bytes(),
+        "g2c_bytes": msched.stores_bytes(),
+        "bcast_bytes": msched.bcast_bytes(),
+        "matrix_bytes": 8 * (msched.nt * msched.tb) ** 2,
+        "per_device": per_device,
     }
 
 

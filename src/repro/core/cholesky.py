@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import ml_dtypes
 
-from .schedule import Op, OpKind, Schedule, build_schedule
+from .schedule import (MultiDeviceSchedule, Op, OpKind, Schedule,
+                       build_multidevice_schedule, build_schedule)
 from .tiling import TileLayout, to_tiles, from_tiles
 from .precision import PrecisionPlan, assign_precision, tile_norms, uniform_plan
 
@@ -55,6 +56,35 @@ def _np_round(x: np.ndarray, cls_name: str) -> np.ndarray:
     return x.astype(_NP_DTYPES[cls_name]).astype(x.dtype)
 
 
+def _np_interpret_op(host: np.ndarray, slots: np.ndarray, op: Op,
+                     lad: tuple) -> None:
+    """Execute one op against the shared host store and a slot buffer.
+
+    The single numerical semantics for both the single-device and the
+    multi-device replay (a RECV is a LOAD whose bytes crossed the
+    interconnect instead of the host link — the class round-trip is the
+    same; BCAST/ALLOC/FREE are bookkeeping-only)."""
+    if op.kind is OpKind.LOAD or op.kind is OpKind.RECV:
+        slots[op.slot_c] = _np_round(host[op.i, op.j], lad[op.cls])
+    elif op.kind is OpKind.STORE:
+        rounded = _np_round(slots[op.slot_c], lad[op.cls])
+        slots[op.slot_c] = rounded
+        host[op.i, op.j] = rounded
+    elif op.kind is OpKind.SYRK:
+        a = slots[op.slot_a]
+        slots[op.slot_c] = slots[op.slot_c] - a @ a.T
+    elif op.kind is OpKind.GEMM:
+        slots[op.slot_c] = slots[op.slot_c] - slots[op.slot_a] @ slots[op.slot_b].T
+    elif op.kind is OpKind.POTRF:
+        slots[op.slot_c] = np.linalg.cholesky(
+            0.5 * (slots[op.slot_c] + slots[op.slot_c].T))
+    elif op.kind is OpKind.TRSM:
+        import scipy.linalg as sla
+        l = slots[op.slot_a]
+        slots[op.slot_c] = sla.solve_triangular(
+            l, slots[op.slot_c].T, lower=True).T
+
+
 def run_schedule_numpy(host_tiles: np.ndarray, sched: Schedule) -> np.ndarray:
     """Interpret the op stream with NumPy.  Returns the factored tile store."""
     host = host_tiles.astype(np.float64).copy()
@@ -63,26 +93,29 @@ def run_schedule_numpy(host_tiles: np.ndarray, sched: Schedule) -> np.ndarray:
     slots = np.zeros((nslots, tb, tb), dtype=np.float64)
     lad = sched.plan.ladder
     for op in sched.ops:
-        if op.kind is OpKind.LOAD:
-            slots[op.slot_c] = _np_round(host[op.i, op.j], lad[op.cls])
-        elif op.kind is OpKind.STORE:
-            rounded = _np_round(slots[op.slot_c], lad[op.cls])
-            slots[op.slot_c] = rounded
-            host[op.i, op.j] = rounded
-        elif op.kind is OpKind.SYRK:
-            a = slots[op.slot_a]
-            slots[op.slot_c] = slots[op.slot_c] - a @ a.T
-        elif op.kind is OpKind.GEMM:
-            slots[op.slot_c] = slots[op.slot_c] - slots[op.slot_a] @ slots[op.slot_b].T
-        elif op.kind is OpKind.POTRF:
-            slots[op.slot_c] = np.linalg.cholesky(
-                0.5 * (slots[op.slot_c] + slots[op.slot_c].T))
-        elif op.kind is OpKind.TRSM:
-            import scipy.linalg as sla
-            l = slots[op.slot_a]
-            slots[op.slot_c] = sla.solve_triangular(
-                l, slots[op.slot_c].T, lower=True).T
-        # ALLOC/FREE are bookkeeping-only
+        _np_interpret_op(host, slots, op, lad)
+    return host
+
+
+def run_multidevice_numpy(host_tiles: np.ndarray,
+                          msched: MultiDeviceSchedule) -> np.ndarray:
+    """Interpret all per-device op streams against one host tile store.
+
+    Each device gets its own slot buffer; the streams are replayed in
+    :meth:`MultiDeviceSchedule.iter_column_order` (column-by-column,
+    owner first), so every RECV observes the owner's finalized
+    (host-coherent) panel-row tile.
+    """
+    host = host_tiles.astype(np.float64).copy()
+    tb = msched.tb
+    lad = msched.plan.ladder
+    slots = []
+    for stream in msched.streams:
+        ns = max((max(o.slot_c, o.slot_a, o.slot_b) for o in stream),
+                 default=-1) + 1
+        slots.append(np.zeros((ns, tb, tb), dtype=np.float64))
+    for d, op in msched.iter_column_order():
+        _np_interpret_op(host, slots[d], op, lad)
     return host
 
 
@@ -186,16 +219,32 @@ def ooc_cholesky(
     compute_dtype=None,
     use_pallas: bool = False,
     block: tuple = (4, 4),
-) -> tuple[np.ndarray, Schedule]:
+    ndev: int = 1,
+) -> tuple[np.ndarray, Schedule | MultiDeviceSchedule]:
     """Out-of-core mixed-precision Cholesky of SPD matrix ``a``.
 
     Returns (L, schedule) where L is lower-triangular (upper part zeroed)
     and ``schedule`` carries the exact data-movement record (Fig. 8/12).
     ``block`` parameterizes the beyond-paper ``policy="v4"`` variant.
+
+    ``ndev > 1`` factors over the 1D block-cyclic multi-device schedule
+    (paper §IV-D): the returned schedule is a
+    :class:`~repro.core.schedule.MultiDeviceSchedule` with one op stream
+    per device, and the replay always runs on the f64 NumPy multi-device
+    executor — ``backend``, ``compute_dtype``, ``use_pallas``, and
+    ``block`` are ignored (per-device JAX execution needs real devices;
+    see ROADMAP).
     """
+    if ndev < 1:
+        raise ValueError(f"ndev must be >= 1, got {ndev}")
     layout = TileLayout(a.shape[0], tb)
     tiles = to_tiles(np.asarray(a, dtype=np.float64), tb)
     plan = plan_for_matrix(tiles, eps_target, ladder)
+    if ndev > 1:
+        msched = build_multidevice_schedule(layout.nt, tb, ndev, policy,
+                                            cache_slots, plan)
+        out = run_multidevice_numpy(tiles, msched)
+        return np.tril(from_tiles(out)), msched
     sched = build_schedule(layout.nt, tb, policy, cache_slots, plan,
                            block=block)
     if backend == "numpy":

@@ -19,6 +19,13 @@ row-cyclically permuted on the host so each device's shard is a dense
 update sweep is a single masked einsum (full-width contraction against
 the zero-padded broadcast row), trading ≤2x redundant MXU flops for a
 scan-free, layout-stable inner step.
+
+The *static-schedule* counterpart of this runtime lives in
+``schedule.build_multidevice_schedule`` (per-device op streams with
+BCAST/RECV edges) + ``analytics.simulate_multi`` + the NumPy replay in
+``cholesky.run_multidevice_numpy``; :func:`modeled_scaling` below ties
+them together so the Fig. 9 scaling argument comes from the exact same
+op streams an executor would replay.
 """
 from __future__ import annotations
 
@@ -55,10 +62,6 @@ def distributed_cholesky(a: np.ndarray, tb: int, mesh: Mesh, axis: str = "model"
 
     tiles = to_tiles(np.asarray(a, dtype=np.float64), tb)[perm]  # [Nt, Nt, tb, tb]
     tiles = jnp.asarray(tiles, dtype=dtype)
-
-    def local_row_of(k):
-        # global row k lives at local index k // P on device k % P
-        return k // p
 
     @jax.jit
     def factor(tiles_sharded):
@@ -128,6 +131,50 @@ def distributed_cholesky(a: np.ndarray, tb: int, mesh: Mesh, axis: str = "model"
 
 def panel_broadcast_bytes(nt: int, tb: int, p: int, word: int = 8) -> int:
     """Analytic per-factorization collective volume: one row-k broadcast per
-    step, each (k+1) tiles to (P-1) receivers (for the roofline model)."""
+    step, each (k+1) tiles to (P-1) receivers (for the roofline model).
+
+    The static multi-device schedule reproduces this number exactly:
+    ``build_multidevice_schedule(nt, tb, p).bcast_bytes()`` (uniform-f64
+    plans) sums the same tiles op by op."""
     total_tiles = sum(k + 1 for k in range(nt))
     return total_tiles * tb * tb * word * (p - 1)
+
+
+def modeled_scaling(nt: int, tb: int, ndevs=(1, 2, 4), policy: str = "v3",
+                    hw_name: str = "gh200",
+                    link_bw: float | None = None) -> list[dict]:
+    """Fig. 9 scaling rows from the *same static schedules the executors
+    replay* — an exact event simulation, not a side-channel estimate.
+
+    For each device count, builds the 1D block-cyclic multi-device
+    schedule, runs :func:`~repro.core.analytics.simulate_multi` on the
+    named hardware preset (``link_bw`` overrides the interconnect), and
+    reports makespan, speedup/efficiency vs the 1-device schedule, and
+    the broadcast volume."""
+    from .analytics import HW, simulate_multi
+    from .schedule import build_multidevice_schedule
+
+    hw = HW[hw_name]
+    m1 = build_multidevice_schedule(nt, tb, 1, policy)
+    r1 = simulate_multi(m1, hw, link_bw=link_bw)
+    t1 = r1.makespan
+    rows = []
+    for p in ndevs:
+        if p == 1:
+            msched, r = m1, r1
+        else:
+            msched = build_multidevice_schedule(nt, tb, p, policy)
+            r = simulate_multi(msched, hw, link_bw=link_bw)
+        rows.append({
+            "ndev": p,
+            "hw": hw_name,
+            "policy": policy,
+            "makespan": r.makespan,
+            "tflops": r.tflops,
+            "speedup": t1 / r.makespan,
+            "efficiency": t1 / (p * r.makespan),
+            "compute_efficiency": r.compute_efficiency,
+            "bcast_bytes": msched.bcast_bytes(),
+            "link_busy": r.link_busy,
+        })
+    return rows

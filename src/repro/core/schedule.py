@@ -23,6 +23,25 @@ Policies (paper §IV-A/B):
     when the device memory budget is exhausted.
   * ``v3``  — V2 + the column's diagonal tile is pinned until every TRSM of
     that column block has consumed it.
+
+Multi-device (paper §IV-D, Fig. 5/9): :func:`build_multidevice_schedule`
+extends the same static trace to ``ndev`` devices with 1D block-cyclic
+ownership — tile-row ``i`` belongs to device ``i % ndev``
+(:meth:`TileLayout.owner`) — and emits *one op stream per device*, each
+with its own cache table.  The only inter-device communication is the
+per-column panel-row broadcast: after the owner of row ``k`` finalizes the
+diagonal tile, it emits one ``BCAST`` per row-``k`` tile ``(k, 0..k)`` and
+every other device emits a matching ``RECV`` into a dedicated panel slot.
+``BCAST`` carries the total egress bytes (tile bytes x (ndev-1) receivers,
+at the tile's class precision) and reads the owner's host-coherent copy
+(``slot_c = -1``); ``RECV`` carries one tile's ingress bytes and lands in
+the receiver's panel region, where the column-``k`` GEMM/TRSM ops consume
+it.  Each tile-row is broadcast exactly once per factorization, so the
+collective volume matches ``distributed.panel_broadcast_bytes`` exactly.
+Everything else — operand loads, accumulator stores, cache decisions — is
+device-local and policy-identical to the single-device trace; with
+``ndev=1`` no BCAST/RECV is emitted and the stream's byte volumes equal
+:func:`build_schedule`'s.
 """
 from __future__ import annotations
 
@@ -31,6 +50,7 @@ import enum
 from typing import Optional
 
 from .precision import PrecisionPlan, BYTES, uniform_plan
+from .tiling import TileLayout
 
 
 class OpKind(enum.Enum):
@@ -42,6 +62,8 @@ class OpKind(enum.Enum):
     TRSM = "trsm"        # C[slot_c] = C[slot_c] @ inv(L[slot_a]).T
     ALLOC = "alloc"      # async policy only: per-tile cudaMalloc analogue
     FREE = "free"
+    BCAST = "bcast"      # owner device sends tile (i,j) to all peers
+    RECV = "recv"        # peer device receives tile (i,j) into a panel slot
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,8 +75,9 @@ class Op:
     slot_a: int = -1         # first operand slot
     slot_b: int = -1         # second operand slot
     cls: int = 0             # precision class (index into plan.ladder)
-    bytes: int = 0           # transfer bytes (LOAD/STORE only)
+    bytes: int = 0           # transfer bytes (LOAD/STORE/BCAST/RECV only)
     k: int = -1              # column step this op belongs to (for tracing)
+    src: int = -1            # source device (BCAST/RECV only)
 
 
 @dataclasses.dataclass
@@ -197,7 +220,7 @@ def build_schedule(
     if policy == "v4":
         return _build_v4(nt, tb, plan, cache_slots, block)
     if cache_slots <= 0:
-        cache_slots = max(4, min(nt * 2 + 2, 2 * nt + 4))
+        cache_slots = max(4, nt * 2 + 2)
 
     ops: list[Op] = []
     emit = ops.append
@@ -436,3 +459,250 @@ def _build_v4(nt: int, tb: int, plan: PrecisionPlan, cache_slots: int,
     return Schedule(ops, nt, tb, "v4", cache_slots, plan,
                     hits=cache.hits, misses=cache.misses,
                     evictions=cache.evictions)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device static schedule (paper §IV-D, Fig. 5/9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MultiDeviceSchedule:
+    """One static op stream per device, 1D block-cyclic tile-row ownership.
+
+    Stream ``d`` contains every op device ``d`` executes, in order; the
+    only cross-stream edges are BCAST (owner) -> RECV (peers) pairs, which
+    carry the per-column panel-row broadcast.  ``hits``/``misses``/
+    ``evictions`` are per-device cache-table counters (v2/v3 only).
+    """
+    streams: list[list[Op]]
+    nt: int
+    tb: int
+    ndev: int
+    policy: str
+    cache_slots: int
+    plan: PrecisionPlan
+    hits: list[int] = dataclasses.field(default_factory=list)
+    misses: list[int] = dataclasses.field(default_factory=list)
+    evictions: list[int] = dataclasses.field(default_factory=list)
+
+    def _bytes(self, kind: OpKind, dev: Optional[int]) -> int:
+        streams = self.streams if dev is None else [self.streams[dev]]
+        return sum(o.bytes for s in streams for o in s if o.kind is kind)
+
+    def loads_bytes(self, dev: Optional[int] = None) -> int:
+        return self._bytes(OpKind.LOAD, dev)
+
+    def stores_bytes(self, dev: Optional[int] = None) -> int:
+        return self._bytes(OpKind.STORE, dev)
+
+    def bcast_bytes(self) -> int:
+        """Total interconnect volume = sum of per-receiver RECV bytes."""
+        return self._bytes(OpKind.RECV, None)
+
+    def count(self, kind: OpKind, dev: Optional[int] = None) -> int:
+        streams = self.streams if dev is None else [self.streams[dev]]
+        return sum(1 for s in streams for o in s if o.kind is kind)
+
+    def flops(self) -> float:
+        n = self.nt * self.tb
+        return n**3 / 3.0
+
+    def iter_column_order(self):
+        """Yield ``(device, op)`` column-by-column, the column owner first.
+
+        This is exactly the partial order the BCAST->RECV edges impose
+        (a RECV of a row-``k`` tile must observe the owner's finalized
+        copy), and the one order both replayers — the NumPy executor and
+        the event simulator — must share with the builder's ownership
+        rule."""
+        layout = TileLayout(self.nt * self.tb, self.tb)
+        ptr = [0] * self.ndev
+        for k in range(self.nt):
+            ow = layout.owner(k, self.ndev)
+            for d in [ow] + [x for x in range(self.ndev) if x != ow]:
+                stream = self.streams[d]
+                while ptr[d] < len(stream) and stream[ptr[d]].k == k:
+                    yield d, stream[ptr[d]]
+                    ptr[d] += 1
+        assert all(ptr[d] == len(self.streams[d]) for d in range(self.ndev))
+
+
+def build_multidevice_schedule(
+    nt: int,
+    tb: int,
+    ndev: int = 1,
+    policy: str = "v3",
+    cache_slots: int = 0,
+    plan: PrecisionPlan | None = None,
+) -> MultiDeviceSchedule:
+    """Emit per-device op streams for the 1D block-cyclic tile Cholesky.
+
+    Tile-row ``i`` is owned by device ``TileLayout.owner(i, ndev)`` =
+    ``i % ndev``.  At column step ``k`` the owner of row ``k`` updates and
+    factors the diagonal tile, broadcasts the finalized panel row
+    ``(k, 0..k)`` (BCAST on the owner stream, one RECV per peer into the
+    receiver's panel slot region), and every device then updates/factors
+    its own rows of column ``k`` locally under its own cache table.
+
+    With ``ndev=1`` the single stream is op-for-op identical to
+    :func:`build_schedule` for the same policy (no BCAST/RECV emitted).
+    """
+    policy = policy.lower()
+    if policy not in ("sync", "v1", "v2", "v3"):
+        raise ValueError(
+            f"multi-device schedule supports sync/v1/v2/v3, got {policy!r}")
+    if ndev < 1:
+        raise ValueError(f"ndev must be >= 1, got {ndev}")
+    if plan is None:
+        plan = uniform_plan(nt)
+    if plan.classes.shape[0] != nt:
+        raise ValueError("precision plan Nt mismatch")
+
+    layout = TileLayout(nt * tb, tb)
+    operand_cache = policy in ("v2", "v3")
+    reuse_accum = policy in ("v1", "v2", "v3")
+    pin_diag = policy == "v3"
+    if cache_slots <= 0:
+        cache_slots = max(4, nt * 2 + 2) if operand_cache else 4
+    panel_base = cache_slots          # panel slot of tile (k, n) = base + n
+
+    streams: list[list[Op]] = [[] for _ in range(ndev)]
+    emits = [s.append for s in streams]
+    caches = ([_CacheTable(cache_slots, emits[d], plan, tb)
+               for d in range(ndev)] if operand_cache else None)
+
+    def tbytes(i, j):
+        cls = int(plan.classes[i, j])
+        return cls, BYTES[plan.ladder[cls]] * tb * tb
+
+    def ccls(*tiles):
+        return max(int(plan.classes[i, j]) for i, j in tiles)
+
+    def store(d, i, j, s, k):
+        cls, nb = tbytes(i, j)
+        emits[d](Op(OpKind.STORE, i=i, j=j, slot_c=s, cls=cls, bytes=nb, k=k))
+
+    def naive_load(d, i, j, k, slot):
+        cls, nb = tbytes(i, j)
+        emits[d](Op(OpKind.LOAD, i=i, j=j, slot_c=slot, cls=cls, bytes=nb, k=k))
+        return slot
+
+    def broadcast_row(k, ow):
+        """Owner ships the finalized panel row (k, 0..k) to every peer."""
+        for n in range(k + 1):
+            cls, nb = tbytes(k, n)
+            emits[ow](Op(OpKind.BCAST, i=k, j=n, cls=cls,
+                         bytes=nb * (ndev - 1), k=k, src=ow))
+            for d in range(ndev):
+                if d != ow:
+                    emits[d](Op(OpKind.RECV, i=k, j=n, slot_c=panel_base + n,
+                                cls=cls, bytes=nb, k=k, src=ow))
+
+    for k in range(nt):
+        ow = layout.owner(k, ndev)
+
+        # --- 1) owner updates + factors the diagonal tile (device-local) ---
+        if operand_cache:
+            cache = caches[ow]
+            c = cache.load(k, k, k, pin=True)
+            for n in range(k):
+                a = cache.load(k, n, k, pin=True)
+                emits[ow](Op(OpKind.SYRK, slot_c=c, slot_a=a, k=k,
+                             cls=ccls((k, n))))
+                cache.unpin(a)
+            emits[ow](Op(OpKind.POTRF, slot_c=c, k=k, cls=ccls((k, k))))
+            store(ow, k, k, c, k)
+            cache.unpin(c)
+            cache.adopt(k, k, c, pin=pin_diag)
+            diag_slot = c
+        elif reuse_accum:  # v1
+            c = naive_load(ow, k, k, k, 0)
+            for n in range(k):
+                a = naive_load(ow, k, n, k, 1)
+                emits[ow](Op(OpKind.SYRK, slot_c=c, slot_a=a, k=k,
+                             cls=ccls((k, n))))
+            emits[ow](Op(OpKind.POTRF, slot_c=c, k=k, cls=ccls((k, k))))
+            store(ow, k, k, c, k)
+        else:  # sync
+            for n in range(k):
+                c = naive_load(ow, k, k, k, 0)
+                a = naive_load(ow, k, n, k, 1)
+                emits[ow](Op(OpKind.SYRK, slot_c=c, slot_a=a, k=k,
+                             cls=ccls((k, n))))
+                store(ow, k, k, c, k)
+            c = naive_load(ow, k, k, k, 0)
+            emits[ow](Op(OpKind.POTRF, slot_c=c, k=k, cls=ccls((k, k))))
+            store(ow, k, k, c, k)
+
+        # --- 2) panel-row broadcast (the only inter-device traffic) ---
+        if ndev > 1:
+            broadcast_row(k, ow)
+
+        # --- 3) every device updates its own rows of column k ---
+        for m in range(k + 1, nt):
+            d = layout.owner(m, ndev)
+            local = d == ow     # row-k operands on-device vs panel region
+            if operand_cache:
+                cache = caches[d]
+                c = cache.load(m, k, k, pin=True)
+                for n in range(k):
+                    a = cache.load(m, n, k, pin=True)
+                    b = (cache.load(k, n, k, pin=True) if local
+                         else panel_base + n)
+                    emits[d](Op(OpKind.GEMM, slot_c=c, slot_a=a, slot_b=b,
+                                k=k, cls=ccls((m, n), (k, n))))
+                    cache.unpin(a)
+                    if local:
+                        cache.unpin(b)
+                dslot = (cache.load(k, k, k, pin=True) if local
+                         else panel_base + k)
+                emits[d](Op(OpKind.TRSM, slot_c=c, slot_a=dslot, k=k,
+                            cls=ccls((k, k), (m, k))))
+                if local and not pin_diag:
+                    cache.unpin(dslot)
+                store(d, m, k, c, k)
+                cache.adopt(m, k, c)
+                cache.unpin(c)
+            elif reuse_accum:  # v1
+                c = naive_load(d, m, k, k, 0)
+                for n in range(k):
+                    a = naive_load(d, m, n, k, 1)
+                    b = (naive_load(d, k, n, k, 2) if local
+                         else panel_base + n)
+                    emits[d](Op(OpKind.GEMM, slot_c=c, slot_a=a, slot_b=b,
+                                k=k, cls=ccls((m, n), (k, n))))
+                dslot = (naive_load(d, k, k, k, 3) if local
+                         else panel_base + k)
+                emits[d](Op(OpKind.TRSM, slot_c=c, slot_a=dslot, k=k,
+                            cls=ccls((k, k), (m, k))))
+                store(d, m, k, c, k)
+            else:  # sync
+                for n in range(k):
+                    c = naive_load(d, m, k, k, 0)
+                    a = naive_load(d, m, n, k, 1)
+                    b = (naive_load(d, k, n, k, 2) if local
+                         else panel_base + n)
+                    emits[d](Op(OpKind.GEMM, slot_c=c, slot_a=a, slot_b=b,
+                                k=k, cls=ccls((m, n), (k, n))))
+                    store(d, m, k, c, k)
+                c = naive_load(d, m, k, k, 0)
+                dslot = (naive_load(d, k, k, k, 1) if local
+                         else panel_base + k)
+                emits[d](Op(OpKind.TRSM, slot_c=c, slot_a=dslot, k=k,
+                            cls=ccls((k, k), (m, k))))
+                store(d, m, k, c, k)
+
+        if operand_cache and pin_diag:
+            caches[ow].unpin(diag_slot)
+
+    msched = MultiDeviceSchedule(streams, nt, tb, ndev, policy, cache_slots,
+                                 plan)
+    if operand_cache:
+        msched.hits = [c.hits for c in caches]
+        msched.misses = [c.misses for c in caches]
+        msched.evictions = [c.evictions for c in caches]
+    else:
+        msched.misses = [msched.count(OpKind.LOAD, d) for d in range(ndev)]
+        msched.hits = [0] * ndev
+        msched.evictions = [0] * ndev
+    return msched

@@ -1,0 +1,75 @@
+"""Hypothesis compatibility shim for the property-test modules.
+
+``hypothesis`` is an *optional* dev dependency (see pyproject.toml).  When
+it is installed the real ``given``/``settings``/``strategies`` are
+re-exported unchanged; when it is absent the property sweeps degrade to
+deterministic fixed-seed sampling so that ``pytest -x -q`` still collects
+and exercises every property (with less adversarial coverage — no
+shrinking, no example database).
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade to fixed-seed parametrized sweeps
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def draw(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = {name: s.draw(rng)
+                             for name, s in strategies.items()}
+                    fn(*args, **dict(kwargs, **drawn))
+
+            # pytest must not mistake the drawn parameters for fixtures
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

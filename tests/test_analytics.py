@@ -99,6 +99,53 @@ def test_mxp_moves_fewer_bytes_and_runs_faster():
     assert simulate(mxp, hw).makespan < simulate(f64, hw).makespan
 
 
+def test_load_waits_for_pending_store_war_hazard():
+    """Regression: in overlap mode a LOAD into a slot must wait until a
+    pending STORE has finished *reading* that slot.  Schedule: load slot 0
+    (1 unit), store slot 0 (3 units on the D2H engine), reload slot 0
+    (1 unit).  Without WAR tracking the reload lands at t=2 while the
+    store drains until t=4; with it the reload starts at t=4."""
+    from repro.core.precision import uniform_plan
+    from repro.core.schedule import Op, Schedule
+
+    tb = 1024
+    plan = uniform_plan(1)
+    unit = 8 * tb * tb                        # bytes moved in one "unit"
+    ops = [
+        Op(OpKind.LOAD, i=0, j=0, slot_c=0, bytes=unit, k=0),
+        Op(OpKind.STORE, i=0, j=0, slot_c=0, bytes=3 * unit, k=0),
+        Op(OpKind.LOAD, i=0, j=0, slot_c=0, bytes=unit, k=0),
+    ]
+    sched = Schedule(ops, nt=1, tb=tb, policy="v1", cache_slots=1, plan=plan)
+    hw = HW["a100-pcie"]                      # h2d_bw == d2h_bw
+    t_unit = unit / hw.h2d_bw
+    res = simulate(sched, hw)
+    # load [0,1], store [1,4], reload [4,5] — hazard-free replay
+    assert res.makespan == pytest.approx(5 * t_unit, rel=1e-9)
+
+
+def test_compute_write_waits_for_pending_store():
+    """A compute op writing a slot whose previous value a STORE is still
+    draining must also stall (same WAR class, compute engine side)."""
+    from repro.core.precision import uniform_plan
+    from repro.core.schedule import Op, Schedule
+
+    tb = 1024
+    plan = uniform_plan(1)
+    unit = 8 * tb * tb
+    ops = [
+        Op(OpKind.LOAD, i=0, j=0, slot_c=0, bytes=unit, k=0),
+        Op(OpKind.STORE, i=0, j=0, slot_c=0, bytes=3 * unit, k=0),
+        Op(OpKind.POTRF, slot_c=0, k=0),
+    ]
+    sched = Schedule(ops, nt=1, tb=tb, policy="v1", cache_slots=1, plan=plan)
+    hw = HW["a100-pcie"]
+    t_unit = unit / hw.h2d_bw
+    res = simulate(sched, hw)
+    # POTRF may only start once the store finishes at t = 4 units
+    assert res.makespan >= 4 * t_unit
+
+
 def test_ascii_trace_renders():
     sched = build_schedule(4, 32, "v3")
     res = simulate(sched, HW["gh200"], record_timeline=True)

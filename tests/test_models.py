@@ -189,7 +189,7 @@ def test_moe_token_conservation():
     """Property: with zero router noise every kept token's output is the
     weighted expert mix, and dropped tokens fall back to shared/zero —
     total output mass never exceeds the dense-mix bound."""
-    from hypothesis import given, settings, strategies as st
+    from _hypothesis_compat import given, settings, st
     from repro.models import moe as M
     import dataclasses
     cfg0 = get_config("dbrx_132b", smoke=True)

@@ -1,0 +1,161 @@
+"""Multi-device static schedules (paper §IV-D, Fig. 5/9): per-device op
+streams, panel-row broadcast accounting, NumPy replay correctness, and
+the simulate_multi interconnect model."""
+import numpy as np
+import pytest
+
+from repro.core.analytics import (HW, simulate, simulate_multi,
+                                  volume_report_multi)
+from repro.core.cholesky import ooc_cholesky, run_multidevice_numpy
+from repro.core.distributed import modeled_scaling, panel_broadcast_bytes
+from repro.core.schedule import (OpKind, build_multidevice_schedule,
+                                 build_schedule)
+from repro.core.tiling import from_tiles, random_spd, to_tiles
+
+POLICIES = ["sync", "v1", "v2", "v3"]
+NDEVS = [1, 2, 4]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_ndev1_matches_single_device_exactly(policy):
+    """ndev=1 must reproduce build_schedule's byte volumes (and, in fact,
+    the op stream itself) for every supported policy."""
+    nt, tb = 8, 16
+    s = build_schedule(nt, tb, policy)
+    m = build_multidevice_schedule(nt, tb, 1, policy)
+    assert m.loads_bytes() == s.loads_bytes()
+    assert m.stores_bytes() == s.stores_bytes()
+    assert m.count(OpKind.BCAST) == 0 and m.count(OpKind.RECV) == 0
+    assert m.streams[0] == [o for o in s.ops if o.kind is not OpKind.ALLOC]
+
+
+@pytest.mark.parametrize("ndev", NDEVS)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_multidevice_executor_correct(ndev, policy):
+    """Replaying all device streams against one host store must factor
+    exactly (f64 plans) for 1, 2, and 4 devices."""
+    nt, tb = 12, 16
+    a = random_spd(nt * tb, seed=11)
+    m = build_multidevice_schedule(nt, tb, ndev, policy)
+    out = run_multidevice_numpy(to_tiles(a, tb), m)
+    np.testing.assert_allclose(np.tril(from_tiles(out)),
+                               np.linalg.cholesky(a), atol=1e-10)
+
+
+@pytest.mark.parametrize("ndev", [2, 4])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_broadcast_volume_matches_analytic(ndev, policy):
+    """Sum of RECV bytes == panel_broadcast_bytes for uniform-f64 plans,
+    for every policy (the broadcast is structural, not policy-driven)."""
+    nt, tb = 10, 8
+    m = build_multidevice_schedule(nt, tb, ndev, policy)
+    assert m.bcast_bytes() == panel_broadcast_bytes(nt, tb, ndev)
+    # each row-k tile is broadcast exactly once to ndev-1 receivers
+    assert m.count(OpKind.RECV) == (ndev - 1) * sum(
+        k + 1 for k in range(nt))
+    assert m.count(OpKind.BCAST) == sum(k + 1 for k in range(nt))
+
+
+def test_task_counts_partition_across_devices():
+    """Every compute task appears on exactly one device stream."""
+    nt, ndev = 9, 4
+    m = build_multidevice_schedule(nt, 8, ndev, "v3")
+    assert m.count(OpKind.POTRF) == nt
+    assert m.count(OpKind.TRSM) == nt * (nt - 1) // 2
+    assert m.count(OpKind.SYRK) == sum(k for k in range(nt))
+    assert m.count(OpKind.GEMM) == sum(
+        k * (nt - 1 - k) for k in range(nt))
+    # block-cyclic ownership: stores of row m land on device m % ndev
+    for d in range(ndev):
+        for op in m.streams[d]:
+            if op.kind is OpKind.STORE:
+                assert op.i % ndev == d
+
+
+def test_ooc_cholesky_ndev():
+    a = random_spd(128, seed=5)
+    L, msched = ooc_cholesky(a, 16, policy="v3", ndev=2)
+    np.testing.assert_allclose(L, np.linalg.cholesky(a), atol=1e-10)
+    assert msched.ndev == 2
+    # mixed precision still converges to the requested accuracy class
+    L2, _ = ooc_cholesky(a, 16, policy="v3", eps_target=1e-6, ndev=4)
+    assert np.abs(L2 - np.linalg.cholesky(a)).max() < 1e-3
+
+
+def test_multidevice_rejects_unsupported():
+    with pytest.raises(ValueError, match="sync/v1/v2/v3"):
+        build_multidevice_schedule(8, 16, 2, "async")
+    with pytest.raises(ValueError, match="ndev"):
+        build_multidevice_schedule(8, 16, 0, "v3")
+
+
+def test_simulate_multi_matches_simulate_on_one_device():
+    for policy in POLICIES:
+        s = build_schedule(8, 256, policy)
+        m = build_multidevice_schedule(8, 256, 1, policy)
+        for hw in (HW["a100-pcie"], HW["gh200"]):
+            r1 = simulate(s, hw)
+            rm = simulate_multi(m, hw)
+            assert rm.makespan == pytest.approx(r1.makespan, rel=1e-12)
+            assert rm.devices[0].h2d_bytes == r1.h2d_bytes
+            assert rm.link_bytes == 0
+
+
+def test_simulate_multi_invariants():
+    m = build_multidevice_schedule(12, 128, 4, "v3")
+    for hw in HW.values():
+        r = simulate_multi(m, hw)
+        assert r.link_bytes == m.bcast_bytes()
+        for d, dev in enumerate(r.devices):
+            assert r.makespan >= dev.finish - 1e-12
+            assert dev.h2d_bytes == m.loads_bytes(d)
+            assert dev.d2h_bytes == m.stores_bytes(d)
+        assert 0 < r.compute_efficiency <= 1.0 + 1e-12
+
+
+def test_fig9_fast_interconnect_scales_better():
+    """Paper Fig. 9: the NVLink-C2C platform keeps parallel compute
+    efficiency high where the PCIe platform drowns in broadcast."""
+    nt, tb = 16, 1024
+    m4 = build_multidevice_schedule(nt, tb, 4, "v3")
+    eff = {name: simulate_multi(m4, HW[name]).compute_efficiency
+           for name in ("a100-pcie", "gh200")}
+    assert eff["gh200"] > eff["a100-pcie"]
+    # same compute preset, link speed as the only variable: monotone
+    hw = HW["gh200"]
+    e_pcie = simulate_multi(m4, hw, link_bw=HW["a100-pcie"].h2d_bw)
+    e_nvl = simulate_multi(m4, hw, link_bw=HW["gh200"].h2d_bw)
+    assert e_nvl.compute_efficiency > e_pcie.compute_efficiency
+
+
+def test_modeled_scaling_rows():
+    rows = modeled_scaling(32, 1024, ndevs=(1, 2, 4), hw_name="gh200")
+    assert [r["ndev"] for r in rows] == [1, 2, 4]
+    assert rows[0]["speedup"] == pytest.approx(1.0)
+    assert rows[2]["speedup"] > rows[1]["speedup"] > 1.5
+    assert rows[0]["bcast_bytes"] == 0
+
+
+def test_volume_report_multi_consistency():
+    m = build_multidevice_schedule(8, 32, 4, "v2")
+    rep = volume_report_multi(m)
+    assert rep["ndev"] == 4 and len(rep["per_device"]) == 4
+    assert sum(d["c2g_bytes"] for d in rep["per_device"]) == rep["c2g_bytes"]
+    assert sum(d["recv_bytes"] for d in rep["per_device"]) == rep["bcast_bytes"]
+    # the lower triangle is stored exactly once across all devices (v2)
+    assert sum(d["stores"] for d in rep["per_device"]) == 8 * 9 // 2
+
+
+def test_mxp_multidevice_bcast_volume_shrinks():
+    """Broadcast bytes follow the tile precision classes: a mixed plan
+    must move no more than uniform f64."""
+    from repro.core.precision import assign_precision
+    nt = 8
+    rng = np.random.default_rng(0)
+    norms = np.abs(rng.standard_normal((nt, nt))) * 1e-6
+    norms[np.diag_indices(nt)] = 10.0
+    total = float(np.sqrt((norms ** 2).sum()))
+    plan = assign_precision(norms, total, 1e-5)
+    mxp = build_multidevice_schedule(nt, 16, 4, "v3", plan=plan)
+    f64 = build_multidevice_schedule(nt, 16, 4, "v3")
+    assert mxp.bcast_bytes() < f64.bcast_bytes()

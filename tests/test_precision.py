@@ -1,7 +1,7 @@
 """Higham-Mary per-tile precision assignment (paper §IV-C, Fig. 4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.precision import (EPS, LADDERS, assign_precision, tile_norms,
                                   uniform_plan)

@@ -2,7 +2,7 @@
 byte-volume ordering (paper Fig. 8), hypothesis property sweeps."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.precision import uniform_plan, LADDERS, BYTES
 from repro.core.schedule import OpKind, build_schedule
