@@ -14,10 +14,9 @@ Headline: weak-correlation MxP >= 2.5x over FP64-only on GH200
 """
 import numpy as np
 
-from repro.core.analytics import HW, simulate
-from repro.core.cholesky import plan_for_matrix
+import repro
+from repro.core.analytics import HW
 from repro.core.precision import assign_precision
-from repro.core.schedule import build_schedule
 from repro.core.tiling import to_tiles
 from repro.geo.matern import (BETA_MEDIUM, BETA_STRONG, BETA_WEAK,
                               generate_locations, matern_covariance)
@@ -47,7 +46,7 @@ def run(out):
         tiles = to_tiles(cov, 256)
         hists = []
         for eps in (1e-5, 1e-8):
-            p = plan_for_matrix(tiles, eps)
+            p = repro.plan_for_matrix(tiles, eps)
             hists.append(f"eps={eps:.0e} "
                          f"{ {k: v for k, v in p.histogram().items() if v} }")
         out(f"[real matern n=2048] {name:7s}: " + " | ".join(hists))
@@ -56,18 +55,18 @@ def run(out):
     nt, tb = 64, 1024
     n = nt * tb
     flops = n ** 3 / 3
-    f64 = build_schedule(nt, tb, "v3")
+    f64 = repro.plan(n, tb=tb, policy="v3")
     speedup_weak = None
     for name, beta, decay in REGIMES:
         out(f"correlation {name} (decay-matched plan):")
         for hw_name in ("gh200", "tpu-v5e"):
             hw = HW[hw_name]
-            t64 = simulate(f64, hw).makespan
+            t64 = f64.simulate(hw).makespan
             cells = [f"fp64 {flops/t64/1e12:6.1f} TF/s"]
             for eps in (1e-5, 1e-6, 1e-8):
-                plan = _decay_plan(nt, decay, eps)
-                s = build_schedule(nt, tb, "v3", plan=plan)
-                t = simulate(s, hw).makespan
+                cfg = repro.CholeskyConfig(tb=tb, policy="v3",
+                                           plan=_decay_plan(nt, decay, eps))
+                t = repro.plan(n, cfg).simulate(hw).makespan
                 cells.append(f"eps={eps:.0e} {flops/t/1e12:6.1f} TF/s "
                              f"({t64/t:4.2f}x)")
                 if (name, hw_name, eps) == ("weak", "gh200", 1e-5):

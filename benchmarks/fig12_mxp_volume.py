@@ -1,6 +1,5 @@
 """Fig. 12: data-movement volume of MxP schedules vs accuracy level."""
-from repro.core.cholesky import plan_for_matrix
-from repro.core.schedule import build_schedule
+import repro
 from repro.core.tiling import to_tiles
 from repro.geo.matern import (BETA_MEDIUM, BETA_STRONG, BETA_WEAK,
                               generate_locations, matern_covariance)
@@ -10,18 +9,18 @@ def run(out):
     out("== Fig. 12: MxP data-movement volume vs accuracy ==")
     n, tb = 2048, 256
     locs = generate_locations(n, seed=2)
+    f64 = repro.plan(n, tb=tb, policy="v3").volume()
+    vol64 = f64["total_bytes"]
     for name, beta in (("weak", BETA_WEAK), ("medium", BETA_MEDIUM),
                        ("strong", BETA_STRONG)):
         cov = matern_covariance(locs, beta=beta)
         tiles = to_tiles(cov, tb)
-        f64 = build_schedule(n // tb, tb, "v3")
-        vol64 = f64.loads_bytes() + f64.stores_bytes()
         cells = [f"fp64 {vol64/1e6:7.1f} MB"]
         vols = {}
         for eps in (1e-5, 1e-6, 1e-8):
-            plan = plan_for_matrix(tiles, eps)
-            s = build_schedule(n // tb, tb, "v3", plan=plan)
-            v = s.loads_bytes() + s.stores_bytes()
+            plan = repro.plan_for_matrix(tiles, eps)
+            cfg = repro.CholeskyConfig(tb=tb, policy="v3", plan=plan)
+            v = repro.plan(n, cfg).volume()["total_bytes"]
             vols[eps] = v
             hist = {k: c for k, c in plan.histogram().items() if c}
             cells.append(f"eps={eps:.0e} {v/1e6:7.1f} MB {hist}")

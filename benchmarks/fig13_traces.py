@@ -2,9 +2,9 @@
 correlation levels (100k-class matrix, GH200 model)."""
 import numpy as np
 
-from repro.core.analytics import HW, ascii_trace, simulate
+import repro
+from repro.core.analytics import HW, ascii_trace
 from repro.core.precision import assign_precision
-from repro.core.schedule import build_schedule
 
 
 def _plan(nt, decay, eps=1e-5, seed=0):
@@ -20,24 +20,26 @@ def _plan(nt, decay, eps=1e-5, seed=0):
 def run(out):
     out("== Fig. 7/13: engine traces (o=C2G  #=compute  g=G2C) ==")
     nt, tb = 24, 1024
+    n = nt * tb
     hw = HW["gh200"]
-    out(f"[Fig. 7] {nt*tb}x{nt*tb} FP64, GH200:")
+    out(f"[Fig. 7] {n}x{n} FP64, GH200:")
     for policy in ("sync", "v3"):
-        r = simulate(build_schedule(nt, tb, policy), hw,
-                     record_timeline=True)
+        r = repro.plan(n, tb=tb, policy=policy).simulate(
+            hw, record_timeline=True)
         out(f"-- {policy} ({r.makespan*1e3:.0f} ms) --")
         out(ascii_trace(r))
     out(f"[Fig. 13] V3 MxP at three correlation levels (eps=1e-5):")
     for name, decay in (("weak", 1e-3), ("medium", 1e-2), ("strong", 2e-1)):
-        s = build_schedule(nt, tb, "v3", plan=_plan(nt, decay))
-        r = simulate(s, hw, record_timeline=True)
+        pl = repro.plan(n, repro.CholeskyConfig(tb=tb, policy="v3",
+                                                plan=_plan(nt, decay)))
+        r = pl.simulate(hw, record_timeline=True)
         out(f"-- {name} ({r.makespan*1e3:.0f} ms, "
-            f"{ {k: v for k, v in s.plan.histogram().items() if v} }) --")
+            f"{ {k: v for k, v in pl.schedule.plan.histogram().items() if v} }) --")
         out(ascii_trace(r))
     # the paper's takeaway: compute time shrinks with weaker correlation
     t = {}
     for name, decay in (("weak", 1e-3), ("strong", 2e-1)):
-        r = simulate(build_schedule(nt, tb, "v3", plan=_plan(nt, decay)), hw)
-        t[name] = r.compute_busy
+        cfg = repro.CholeskyConfig(tb=tb, policy="v3", plan=_plan(nt, decay))
+        t[name] = repro.plan(n, cfg).simulate(hw).compute_busy
     assert t["weak"] < t["strong"]
     out("")

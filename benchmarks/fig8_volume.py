@@ -2,10 +2,10 @@
 
 These are exact replays of the static schedule, not estimates; the
 V3 < V2 < V1 < async ordering and the half-matrix G2C property are
-asserted as part of the benchmark.
+asserted as part of the benchmark.  Volumes come straight off the cached
+plans of the planner API (no executor is ever built).
 """
-from repro.core.analytics import volume_report
-from repro.core.schedule import build_schedule
+import repro
 
 POLICIES = ["sync", "async", "v1", "v2", "v3"]
 
@@ -20,8 +20,7 @@ def run(out):
             f"{'total GB':>9s} {'loads':>7s} {'hits':>6s}")
         vols = {}
         for p in POLICIES:
-            s = build_schedule(nt, tb, p)
-            r = volume_report(s)
+            r = repro.plan(n, tb=tb, policy=p).volume()
             vols[p] = r["c2g_bytes"]
             out(f"  {p:8s} {r['c2g_bytes']/1e9:9.2f} "
                 f"{r['g2c_bytes']/1e9:9.2f} {r['total_bytes']/1e9:9.2f} "

@@ -5,13 +5,14 @@ MxP behind NVLink-C2C).  On the TPU v5e target the host link is 32 GB/s
 while MxP compute runs at up to 394 TFLOP/s — the link becomes the
 bottleneck and V3's ~1 load/GEMM tail shows.  V4 blocks the external
 update (h rows x w panel columns), amortizing loads (h+w)/(h*w) per
-GEMM.  All numbers from the exact schedule + three-engine model.
+GEMM.  All numbers from the exact schedule + three-engine model, via
+cached :func:`repro.plan` configs.
 """
 import numpy as np
 
-from repro.core.analytics import HW, simulate, volume_report
+import repro
+from repro.core.analytics import HW
 from repro.core.precision import assign_precision
-from repro.core.schedule import build_schedule
 
 
 def _geo_plan(nt, seed=0, eps=1e-5):
@@ -33,38 +34,40 @@ def run(out):
         f"({slots*8*tb*tb/1e9:.1f} GB device window)")
 
     rows = [
-        ("v3 fp64", build_schedule(nt, tb, "v3", cache_slots=slots)),
-        ("v4(6,4) fp64", build_schedule(nt, tb, "v4", cache_slots=slots,
-                                        block=(6, 4))),
-        ("v3 MxP", build_schedule(nt, tb, "v3", cache_slots=slots,
-                                  plan=plan)),
-        ("v4(6,4) MxP", build_schedule(nt, tb, "v4", cache_slots=slots,
-                                       plan=plan, block=(6, 4))),
-        ("v4(10,6) MxP @128", build_schedule(nt, tb, "v4", cache_slots=128,
-                                             plan=plan, block=(10, 6))),
+        ("v3 fp64", repro.CholeskyConfig(tb=tb, policy="v3",
+                                         cache_slots=slots)),
+        ("v4(6,4) fp64", repro.CholeskyConfig(tb=tb, policy="v4",
+                                              cache_slots=slots,
+                                              block=(6, 4))),
+        ("v3 MxP", repro.CholeskyConfig(tb=tb, policy="v3",
+                                        cache_slots=slots, plan=plan)),
+        ("v4(6,4) MxP", repro.CholeskyConfig(tb=tb, policy="v4",
+                                             cache_slots=slots, plan=plan,
+                                             block=(6, 4))),
+        ("v4(10,6) MxP @128", repro.CholeskyConfig(tb=tb, policy="v4",
+                                                   cache_slots=128, plan=plan,
+                                                   block=(10, 6))),
     ]
     for hw_name in ("tpu-v5e", "a100-pcie", "gh200"):
         hw = HW[hw_name]
         out(f"--- {hw_name} ---")
-        for name, s in rows:
-            r = simulate(s, hw)
-            v = volume_report(s)
+        for name, cfg in rows:
+            pl = repro.plan(n, cfg)
+            r = pl.simulate(hw)
+            v = pl.volume()
             out(f"  {name:18s} C2G {v['c2g_bytes']/1e9:6.2f} GB  "
                 f"makespan {r.makespan*1e3:7.0f} ms  {r.tflops:6.1f} TF/s "
                 f"(cmp {r.compute_busy*1e3:6.0f} / h2d {r.h2d_busy*1e3:6.0f})")
 
     # headline assertions (the recorded §Perf results)
     hw = HW["tpu-v5e"]
-    t_v3 = simulate(build_schedule(nt, tb, "v3", cache_slots=slots,
-                                   plan=plan), hw).makespan
-    t_v4 = simulate(build_schedule(nt, tb, "v4", cache_slots=128,
-                                   plan=plan, block=(10, 6)), hw).makespan
+    t_v3 = repro.plan(n, rows[2][1]).simulate(hw).makespan
+    t_v4 = repro.plan(n, rows[4][1]).simulate(hw).makespan
     out(f"v5e MxP: V4 speedup over V3 = {t_v3/t_v4:.2f}x "
         f"(link-bound -> near compute floor)")
     assert t_v4 < t_v3 * 0.55
     # fp64 on v5e is compute-bound: V4 must not regress
-    t3f = simulate(build_schedule(nt, tb, "v3", cache_slots=slots), hw).makespan
-    t4f = simulate(build_schedule(nt, tb, "v4", cache_slots=slots,
-                                  block=(6, 4)), hw).makespan
+    t3f = repro.plan(n, rows[0][1]).simulate(hw).makespan
+    t4f = repro.plan(n, rows[1][1]).simulate(hw).makespan
     assert t4f <= t3f * 1.02
     out("")

@@ -1,45 +1,67 @@
-"""Quickstart: out-of-core mixed-precision Cholesky in five lines.
+"""Quickstart: plan once, factor and solve many times.
 
-Factors an SPD matrix that (conceptually) exceeds device memory by
-streaming tiles through a bounded slot buffer under the static V3
-schedule, with per-tile precision chosen by the Higham-Mary criterion.
+The paper's schedule is *static*: built ahead of time, replayed per
+matrix.  The public API mirrors that in two phases:
+
+  1. ``repro.plan(n, config)``  — build the op stream + cache tables once
+     for a frozen ``CholeskyConfig`` (tiling, policy, precision, memory,
+     backend); plans are cached by ``(n, config)``.
+  2. ``.compile()``             — jit the executor once; the returned
+     ``OOCSolver`` then amortizes both across every ``factor()`` /
+     ``solve()`` of that shape.
 """
 import numpy as np
 
 import jax
 jax.config.update("jax_enable_x64", True)
 
-from repro.core.analytics import HW, simulate, volume_report
-from repro.core.cholesky import ooc_cholesky
+import repro
 from repro.core.tiling import random_spd
 
 
 def main():
     n, tb = 1024, 128
-    a = random_spd(n, seed=0)
+    rng = np.random.default_rng(0)
 
-    # FP64 baseline (paper-faithful left-looking V3)
-    l64, sched64 = ooc_cholesky(a, tb, policy="v3")
-    err64 = np.abs(l64 - np.linalg.cholesky(a)).max()
+    # -- phase 1+2: FP64 V3 plan, compiled once ---------------------------
+    cfg64 = repro.CholeskyConfig(tb=tb, policy="v3")
+    solver = repro.plan(n, cfg64).compile()
 
-    # four-precision MxP at eps_target = 1e-8
-    lmx, schedmx = ooc_cholesky(a, tb, policy="v3", eps_target=1e-8)
-    errmx = np.abs(lmx @ lmx.T - a).max() / np.abs(a).max()
-
+    # -- replay across matrices: schedule + jit are built exactly once ----
+    for seed in range(3):
+        l64 = solver.factor(random_spd(n, seed=seed))
     print(f"matrix {n}x{n}, tiles {tb}x{tb}")
-    print(f"FP64 V3   : max|L - chol(A)| = {err64:.2e}")
-    print(f"MxP  V3   : rel residual     = {errmx:.2e}")
-    print(f"precision histogram: {schedmx.plan.histogram()}")
+    print(f"3 factorizations through one solver: stats={solver.stats}")
 
-    v64 = volume_report(sched64)
-    vmx = volume_report(schedmx)
+    a = random_spd(n, seed=0)
+    l64 = solver.factor(a)
+    err64 = np.abs(l64 - np.linalg.cholesky(a)).max()
+    print(f"FP64 V3   : max|L - chol(A)| = {err64:.2e}")
+
+    # -- the factorization is a solver: blocked triangular substitution --
+    b = rng.standard_normal(n)
+    x = solver.solve(b)
+    print(f"solve(b)  : max|Ax - b|      = {np.abs(a @ x - b).max():.2e}")
+
+    # -- four-precision MxP at eps_target = 1e-8 --------------------------
+    # eps_target plans depend on the matrix's tile norms; specialize(a)
+    # freezes the Higham-Mary plan so the MxP solver is reusable too.
+    cfgmx = repro.CholeskyConfig(tb=tb, policy="v3",
+                                 eps_target=1e-8).specialize(a)
+    mxp = repro.plan(n, cfgmx).compile()
+    lmx = mxp.factor(a)
+    errmx = np.abs(lmx @ lmx.T - a).max() / np.abs(a).max()
+    print(f"MxP  V3   : rel residual     = {errmx:.2e}")
+    print(f"precision histogram: {cfgmx.plan.histogram()}")
+
+    # -- exact data movement + modeled platform speedups ------------------
+    v64, vmx = solver.volume(), mxp.volume()
     print(f"bytes moved  FP64: {v64['total_bytes']/1e6:8.1f} MB"
           f"   MxP: {vmx['total_bytes']/1e6:8.1f} MB"
           f"   ({v64['total_bytes']/max(vmx['total_bytes'],1):.2f}x less)")
-
     for hw in ("a100-pcie", "gh200", "tpu-v5e"):
-        t64 = simulate(sched64, HW[hw]).makespan
-        tmx = simulate(schedmx, HW[hw]).makespan
+        t64 = solver.simulate(repro.HW[hw]).makespan
+        tmx = mxp.simulate(repro.HW[hw]).makespan
         print(f"{hw:10s} modeled speedup MxP vs FP64: {t64/tmx:5.2f}x")
 
 

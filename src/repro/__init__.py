@@ -1,0 +1,49 @@
+"""Mixed-precision out-of-core Cholesky with static task scheduling.
+
+Reproduction of "Accelerating Mixed-Precision Out-of-Core Cholesky
+Factorization with Static Task Scheduling" on the JAX/Pallas stack, grown
+toward a production-scale serving system (see ROADMAP.md).
+
+Public surface — the two-phase planner/executor API::
+
+    import repro
+
+    cfg = repro.CholeskyConfig(tb=256, policy="v3")
+    solver = repro.plan(n, cfg).compile()   # schedule + jit built once
+    l = solver.factor(a)                    # replayed per matrix
+    x = solver.solve(b)                     # blocked fwd/back substitution
+    r = solver.simulate(repro.HW["gh200"])  # three-engine event model
+    v = solver.volume()                     # exact byte-volume report
+
+The one-shot :func:`ooc_cholesky` remains as a deprecated shim.
+"""
+from repro.core.analytics import (HW, HardwareModel, ascii_trace, simulate,
+                                  simulate_multi, volume_report,
+                                  volume_report_multi)
+from repro.core.api import (CholeskyConfig, CholeskyPlan, OOCSolver,
+                            clear_plan_cache, plan)
+from repro.core.cholesky import ooc_cholesky, plan_for_matrix
+from repro.core.precision import (LADDERS, PrecisionPlan, assign_precision,
+                                  uniform_plan)
+from repro.core.schedule import (MultiDeviceSchedule, Op, OpKind, Schedule,
+                                 build_multidevice_schedule, build_schedule)
+from repro.core.tiling import TileLayout, from_tiles, random_spd, to_tiles
+
+__version__ = "0.2.0"
+
+__all__ = [
+    "__version__",
+    # planner/executor API
+    "CholeskyConfig", "CholeskyPlan", "OOCSolver", "plan", "clear_plan_cache",
+    # one-shot shim + precision planning
+    "ooc_cholesky", "plan_for_matrix",
+    "PrecisionPlan", "assign_precision", "uniform_plan", "LADDERS",
+    # schedules
+    "Schedule", "MultiDeviceSchedule", "Op", "OpKind",
+    "build_schedule", "build_multidevice_schedule",
+    # analytics
+    "HardwareModel", "HW", "simulate", "simulate_multi",
+    "volume_report", "volume_report_multi", "ascii_trace",
+    # tiling
+    "TileLayout", "to_tiles", "from_tiles", "random_spd",
+]

@@ -96,8 +96,18 @@ class SimResult:
         return self.h2d_bytes + self.d2h_bytes
 
 
+def _as_single(sched) -> Schedule:
+    """Accept the unified MultiDeviceSchedule in its ndev=1 degenerate form
+    (the type the planner API returns) wherever a flat Schedule is wanted;
+    ndev>1 raises, pointing at simulate_multi/volume_report_multi."""
+    if isinstance(sched, MultiDeviceSchedule):
+        return sched.to_single()
+    return sched
+
+
 def simulate(sched: Schedule, hw: HardwareModel, record_timeline: bool = False) -> SimResult:
     """Event-driven simulation of the op stream on a three-engine machine."""
+    sched = _as_single(sched)
     tb = sched.tb
     lad = sched.plan.ladder
     overlap = sched.policy != "sync"
@@ -176,6 +186,7 @@ def simulate(sched: Schedule, hw: HardwareModel, record_timeline: bool = False) 
 
 def volume_report(sched: Schedule) -> dict:
     """Exact C2G/G2C byte volumes (paper Fig. 8 / Fig. 12)."""
+    sched = _as_single(sched)
     return {
         "policy": sched.policy,
         "nt": sched.nt,

@@ -1,0 +1,427 @@
+"""Two-phase planner/executor API: ``CholeskyConfig`` -> plan -> solve.
+
+The paper's core claim is that the schedule is *static*: built once ahead
+of time, replayed for every factorization.  This module makes that the
+shape of the public API instead of an implementation detail:
+
+    import repro
+
+    cfg = repro.CholeskyConfig(tb=256, policy="v3")
+    solver = repro.plan(n, cfg).compile()   # schedule + jit, built ONCE
+    for a in covariance_stream:             # amortized across calls
+        l = solver.factor(a)
+        x = solver.solve(b)                 # blocked fwd/back substitution
+
+Phases:
+
+* :class:`CholeskyConfig` — frozen, hashable description of everything
+  that determines the op stream and the executor: tiling (``tb``), policy,
+  precision (``eps_target``/``ladder``/explicit ``plan``), device-memory
+  budget (``cache_slots``), and execution (``backend``/``compute_dtype``/
+  ``use_pallas``/``block``/``ndev``).  Validation is *eager*: unsupported
+  combinations raise at construction, not deep inside an executor (the old
+  ``ooc_cholesky`` silently ignored four kwargs when ``ndev > 1``).
+* :func:`plan` — builds the static schedule for ``(n, config)`` and caches
+  the resulting :class:`CholeskyPlan` (LRU, value-keyed: two configs that
+  compare equal share one plan).  The schedule is the unified
+  :class:`~repro.core.schedule.MultiDeviceSchedule`; ``ndev=1`` is its
+  degenerate single-stream form.
+* :meth:`CholeskyPlan.compile` — builds the executor (one ``jax.jit``
+  trace for the JAX backend) exactly once per plan and returns a
+  :class:`OOCSolver` over it.  The solver is fresh per ``compile()``
+  call — factored state is never shared between call sites — but every
+  solver of a plan replays the same compiled executor.
+
+Mixed precision: an ``eps_target`` plan depends on the matrix values
+(tile norms), so a *reusable* solver needs the plan frozen up front —
+``config.specialize(a)`` computes the Higham-Mary plan from a
+representative matrix and returns a config with it pinned.  The one-shot
+:func:`repro.core.cholesky.ooc_cholesky` shim does this per call.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+from .precision import LADDERS, PrecisionPlan, uniform_plan
+from .schedule import (MultiDeviceSchedule, build_multidevice_schedule,
+                       build_schedule)
+from .tiling import TileLayout, from_tiles, to_tiles
+
+_POLICIES = ("sync", "async", "v1", "v2", "v3", "v4")
+_MULTIDEV_POLICIES = ("sync", "v1", "v2", "v3")
+_BACKENDS = ("auto", "jax", "numpy")
+_DEFAULT_BLOCK = (4, 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class CholeskyConfig:
+    """Frozen description of one OOC Cholesky pipeline.
+
+    Hashable by value (including the optional :class:`PrecisionPlan`), so
+    it can key the plan cache: equal configs share one schedule and one
+    compiled executor.
+    """
+
+    tb: int                                   # tile size
+    policy: str = "v3"                        # sync/async/v1/v2/v3/v4
+    eps_target: Optional[float] = None        # Higham-Mary accuracy level
+    ladder: str = "tpu"                       # precision ladder name
+    plan: Optional[PrecisionPlan] = None      # explicit per-tile classes
+    cache_slots: int = 0                      # 0 = policy default
+    backend: str = "auto"                     # auto -> jax (ndev=1) / numpy
+    compute_dtype: Any = None                 # jax backend compute dtype
+    use_pallas: bool = False                  # Pallas tile kernels (jax)
+    block: tuple = _DEFAULT_BLOCK             # v4 (h, w) update block
+    ndev: int = 1                             # 1D block-cyclic devices
+
+    def __post_init__(self):
+        object.__setattr__(self, "policy", str(self.policy).lower())
+        object.__setattr__(self, "block", tuple(self.block))
+        if self.tb < 1:
+            raise ValueError(f"tb must be >= 1, got {self.tb}")
+        if self.policy not in _POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}; "
+                             f"expected one of {_POLICIES}")
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected one of {_BACKENDS}")
+        if self.ladder not in LADDERS:
+            raise ValueError(f"unknown ladder {self.ladder!r}; "
+                             f"expected one of {tuple(LADDERS)}")
+        if self.eps_target is not None and self.eps_target <= 0:
+            raise ValueError(f"eps_target must be > 0, got {self.eps_target}")
+        if self.eps_target is not None and self.plan is not None:
+            raise ValueError("pass either eps_target or an explicit plan, "
+                             "not both")
+        if self.cache_slots < 0:
+            raise ValueError(f"cache_slots must be >= 0 (0 = policy "
+                             f"default), got {self.cache_slots}")
+        if self.ndev < 1:
+            raise ValueError(f"ndev must be >= 1, got {self.ndev}")
+        if (len(self.block) != 2
+                or any(not isinstance(x, int) or x < 1 for x in self.block)):
+            raise ValueError(f"block must be two positive ints, "
+                             f"got {self.block!r}")
+        if self.policy != "v4" and self.block != _DEFAULT_BLOCK:
+            raise ValueError(
+                f"block={self.block} is only meaningful for policy='v4' "
+                f"(got policy={self.policy!r})")
+        if self.policy == "v4" and self.cache_slots > 0:
+            h, w = self.block
+            if self.cache_slots < h * w + w + 2:
+                raise ValueError(
+                    f"v4 with block={self.block} needs >= h*w + w + 2 = "
+                    f"{h * w + w + 2} cache slots, got {self.cache_slots}")
+        if self.ndev > 1:
+            # These were the four kwargs ooc_cholesky used to ignore
+            # silently for ndev > 1 — they now fail eagerly.
+            if self.policy not in _MULTIDEV_POLICIES:
+                raise ValueError(
+                    f"multi-device schedules support sync/v1/v2/v3, "
+                    f"got {self.policy!r}")
+            if self.backend == "jax":
+                raise ValueError(
+                    "backend='jax' is not supported with ndev > 1: the "
+                    "multi-device replay runs on the f64 NumPy executor "
+                    "(per-device JAX execution needs real devices, see "
+                    "ROADMAP); use backend='auto' or 'numpy'")
+            if self.use_pallas:
+                raise ValueError("use_pallas is not supported with ndev > 1")
+            if self.compute_dtype is not None:
+                raise ValueError(
+                    "compute_dtype is not supported with ndev > 1 (the "
+                    "multi-device replay is f64 NumPy)")
+        if self.use_pallas and self.resolved_backend() != "jax":
+            raise ValueError("use_pallas requires the 'jax' backend, "
+                             f"got backend={self.backend!r}")
+        if self.compute_dtype is not None and self.resolved_backend() != "jax":
+            raise ValueError("compute_dtype is only supported on the 'jax' "
+                             f"backend, got backend={self.backend!r}")
+
+    def resolved_backend(self) -> str:
+        """'auto' resolves to 'jax' single-device, 'numpy' multi-device."""
+        if self.backend != "auto":
+            return self.backend
+        return "numpy" if self.ndev > 1 else "jax"
+
+    def specialize(self, a: np.ndarray) -> "CholeskyConfig":
+        """Freeze the matrix-dependent precision plan into the config.
+
+        With ``eps_target`` set, the Higham-Mary plan is computed from
+        ``a``'s tile norms and pinned as ``plan``; the result is fully
+        static and can be planned/compiled for reuse.  A config that is
+        already static (uniform f64 or explicit plan) is returned as-is.
+        """
+        if self.eps_target is None:
+            return self
+        from .cholesky import plan_for_matrix
+        a = np.asarray(a, dtype=np.float64)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"expected a square matrix, got {a.shape}")
+        pplan = plan_for_matrix(to_tiles(a, self.tb), self.eps_target,
+                                self.ladder)
+        return dataclasses.replace(self, eps_target=None, plan=pplan)
+
+
+class OOCSolver:
+    """Reusable compiled executor for one ``(n, config)`` plan.
+
+    Created via ``repro.plan(n, config).compile()``.  ``factor(a)``
+    replays the cached schedule (the JAX executor lives on the shared
+    plan and is jitted exactly once across every solver of that plan —
+    see ``stats``); ``solve(b)`` runs blocked forward/back substitution
+    against the factored tile store; ``simulate(hw)`` / ``volume()``
+    expose the analytics of the underlying plan.
+
+    Each ``compile()`` call returns a *fresh* solver: the expensive
+    artifacts (schedule, jitted executor) are shared through the plan
+    cache, but the factored tile store is per-solver, so independent
+    call sites holding solvers for the same ``(n, config)`` cannot
+    observe (or silently consume) each other's factors.
+    """
+
+    def __init__(self, plan: "CholeskyPlan", executor: "_CompiledExecutor"):
+        self._plan = plan
+        self._executor = executor
+        self._tiles = None          # this solver's factored tile store (f64)
+        self._factor_calls = 0
+        self._solve_calls = 0
+
+    @property
+    def stats(self) -> dict:
+        """``jit_traces`` is plan-wide (the amortization contract);
+        ``factor_calls``/``solve_calls`` count this solver's own use."""
+        return {"jit_traces": self._executor.jit_traces,
+                "factor_calls": self._factor_calls,
+                "solve_calls": self._solve_calls}
+
+    # -- two-phase surface -------------------------------------------------
+    @property
+    def config(self) -> CholeskyConfig:
+        return self._plan.config
+
+    @property
+    def n(self) -> int:
+        return self._plan.n
+
+    @property
+    def schedule(self) -> MultiDeviceSchedule:
+        return self._plan.schedule
+
+    def simulate(self, hw, link_bw=None, record_timeline: bool = False):
+        return self._plan.simulate(hw, link_bw=link_bw,
+                                   record_timeline=record_timeline)
+
+    def volume(self) -> dict:
+        return self._plan.volume()
+
+    # -- execution ---------------------------------------------------------
+    def factor(self, a: np.ndarray,
+               materialize: bool = True) -> np.ndarray | None:
+        """Factor SPD ``a`` through the cached schedule; returns tril L.
+
+        ``materialize=False`` skips assembling the dense n x n factor and
+        returns None — the factorization stays in the tile store, where
+        ``solve()``/``solve_lower()``/``logdet()`` consume it.  That is
+        the out-of-core mode: at OOC scale the dense L is exactly the
+        object that does not fit.
+        """
+        a = np.asarray(a, dtype=np.float64)
+        if a.shape != (self.n, self.n):
+            raise ValueError(
+                f"matrix shape {a.shape} does not match the plan's "
+                f"n={self.n}; build a new plan for a different size")
+        tiles = to_tiles(a, self._plan.config.tb)
+        cfg = self._plan.config
+        if cfg.ndev > 1:
+            from .cholesky import run_multidevice_numpy
+            out = run_multidevice_numpy(tiles, self._plan.schedule)
+        elif cfg.resolved_backend() == "numpy":
+            from .cholesky import run_schedule_numpy
+            out = run_schedule_numpy(tiles, self._plan.single_schedule())
+        else:
+            import jax.numpy as jnp
+            ex = self._executor
+            out = np.asarray(ex.fn(jnp.asarray(tiles, dtype=ex.dtype)),
+                             dtype=np.float64)
+        self._tiles = out
+        self._factor_calls += 1
+        if not materialize:
+            return None
+        return np.tril(from_tiles(out))
+
+    def _factored_tiles(self) -> np.ndarray:
+        if self._tiles is None:
+            raise RuntimeError("no factor available: call factor(a) before "
+                               "solve()/solve_lower()/logdet()")
+        return self._tiles
+
+    def solve(self, b: np.ndarray) -> np.ndarray:
+        """Solve ``A x = b`` with the last factored ``A = L L^T``."""
+        from .solve import cho_solve_tiles
+        x = cho_solve_tiles(self._factored_tiles(), b)
+        self._solve_calls += 1
+        return x
+
+    def solve_lower(self, b: np.ndarray) -> np.ndarray:
+        """Forward substitution ``L z = b`` (e.g. Gaussian quad forms)."""
+        from .solve import solve_lower_tiles
+        z = solve_lower_tiles(self._factored_tiles(), b)
+        self._solve_calls += 1
+        return z
+
+    def logdet(self) -> float:
+        """``log|A|`` of the last factored matrix, from the tile store."""
+        from .solve import logdet_tiles
+        return logdet_tiles(self._factored_tiles())
+
+
+def _resolved_dtype(cfg: CholeskyConfig):
+    """Compute dtype the jax executor would use *right now* (None for
+    numpy backends).  Read per compile() so a cached plan does not pin a
+    float32 executor across a later jax_enable_x64 flip — the pre-0.2
+    one-shot API re-read the flag on every call."""
+    if cfg.resolved_backend() != "jax":
+        return None
+    import jax
+    import jax.numpy as jnp
+    return cfg.compute_dtype or (jnp.float64 if jax.config.jax_enable_x64
+                                 else jnp.float32)
+
+
+class _CompiledExecutor:
+    """The per-plan compiled artifact: built once per compute dtype,
+    shared by every solver of the plan.  Holds no factored data — only
+    the jitted function (JAX backend) and its trace counter."""
+
+    def __init__(self, plan: "CholeskyPlan"):
+        self.jit_traces = 0
+        self.fn = None
+        cfg = plan.config
+        self.dtype = _resolved_dtype(cfg)
+        if cfg.resolved_backend() == "jax":
+            import jax
+            from .cholesky import make_jax_executor
+            raw = make_jax_executor(plan.single_schedule(), self.dtype,
+                                    use_pallas=cfg.use_pallas)
+
+            def traced(host_tiles):
+                # body runs only while tracing: counts jit compilations
+                self.jit_traces += 1
+                return raw(host_tiles)
+
+            self.fn = jax.jit(traced)
+
+
+@dataclasses.dataclass
+class CholeskyPlan:
+    """Cached static schedule for one ``(n, config)``; ``compile()`` hands
+    out per-call-site solvers over one shared compiled executor."""
+
+    n: int
+    config: CholeskyConfig
+    schedule: MultiDeviceSchedule
+    _single: Any = None            # single-device Schedule (ndev=1 only)
+    _executor: Optional[_CompiledExecutor] = None
+
+    def single_schedule(self):
+        """The flat single-device Schedule backing the ndev=1 degenerate."""
+        if self._single is None:
+            self._single = self.schedule.to_single()
+        return self._single
+
+    def compile(self) -> OOCSolver:
+        """Return a fresh solver over this plan's one compiled executor.
+
+        The executor (jit) is built on first call and reused afterwards
+        (rebuilt only if the jax x64 flag changed the compute dtype in
+        the meantime); the solver itself is new each time so factored
+        state stays with the call site that produced it (and is freed
+        with it — the plan cache never pins a factored matrix)."""
+        if (self._executor is None
+                or self._executor.dtype != _resolved_dtype(self.config)):
+            self._executor = _CompiledExecutor(self)
+        return OOCSolver(self, self._executor)
+
+    def simulate(self, hw, link_bw=None, record_timeline: bool = False):
+        """Three-engine event model (per-device + shared link for ndev>1)."""
+        from . import analytics
+        if self.config.ndev > 1:
+            return analytics.simulate_multi(self.schedule, hw,
+                                            link_bw=link_bw,
+                                            record_timeline=record_timeline)
+        return analytics.simulate(self.single_schedule(), hw,
+                                  record_timeline=record_timeline)
+
+    def volume(self) -> dict:
+        """Exact byte-volume report of the static schedule (Fig. 8/12)."""
+        from . import analytics
+        if self.config.ndev > 1:
+            return analytics.volume_report_multi(self.schedule)
+        return analytics.volume_report(self.single_schedule())
+
+
+_PLAN_CACHE: "collections.OrderedDict[tuple, CholeskyPlan]" = \
+    collections.OrderedDict()
+_PLAN_CACHE_MAX = 32
+_SCHEDULE_BUILDS = 0     # module-wide build counter (amortization tests)
+
+
+def schedule_build_count() -> int:
+    return _SCHEDULE_BUILDS
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+def plan(n: int, config: CholeskyConfig | None = None,
+         **overrides) -> CholeskyPlan:
+    """Build (or fetch) the static plan for an ``n x n`` factorization.
+
+    ``plan(n, config)`` or the kwargs shorthand ``plan(n, tb=..., ...)``.
+    Plans are cached by ``(n, config)`` value: repeated calls with equal
+    configs return the *same* plan object, whose ``compile()`` reuses one
+    jitted executor — schedule construction and tracing are amortized
+    across every factorization of that shape.
+    """
+    global _SCHEDULE_BUILDS
+    if config is None:
+        config = CholeskyConfig(**overrides)
+    elif overrides:
+        config = dataclasses.replace(config, **overrides)
+    if config.eps_target is not None:
+        raise ValueError(
+            "eps_target makes the precision plan matrix-dependent, so it "
+            "cannot be planned ahead of the data: freeze it with "
+            "config.specialize(a) (or pass plan=plan_for_matrix(...)), or "
+            "use the one-shot ooc_cholesky()")
+    layout = TileLayout(n, config.tb)   # validates n % tb == 0
+    key = (n, config)
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        _PLAN_CACHE.move_to_end(key)
+        return cached
+    _SCHEDULE_BUILDS += 1
+    # resolve the default plan here (not in the builders) so the
+    # schedule's metadata carries the config's ladder, not a hardcoded one
+    pplan = config.plan or uniform_plan(layout.nt, "f64", config.ladder)
+    if config.ndev > 1:
+        msched = build_multidevice_schedule(
+            layout.nt, config.tb, config.ndev, config.policy,
+            config.cache_slots, pplan)
+        single = None
+    else:
+        single = build_schedule(layout.nt, config.tb, config.policy,
+                                config.cache_slots, pplan,
+                                block=config.block)
+        msched = MultiDeviceSchedule.from_single(single)
+    p = CholeskyPlan(n=n, config=config, schedule=msched, _single=single)
+    _PLAN_CACHE[key] = p
+    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+        _PLAN_CACHE.popitem(last=False)
+    return p

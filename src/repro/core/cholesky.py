@@ -16,6 +16,23 @@ the interconnect carries class-precision bytes ("on-the-fly down-casting",
 paper §IV-C).  STORE rounds the finished tile through its class, and the
 rounded value is also written back to the slot so that later consumers see
 exactly what the paper's low-precision device tile would contain.
+
+Public API migration (0.2): the one-shot :func:`ooc_cholesky` is a
+deprecated shim over the two-phase planner/executor API in
+:mod:`repro.core.api` — build a frozen config once, then reuse the
+compiled solver across same-shape factorizations::
+
+    solver = repro.plan(n, repro.CholeskyConfig(tb=256, policy="v3")).compile()
+    l = solver.factor(a)        # schedule + jit amortized across calls
+    x = solver.solve(b)         # blocked triangular substitution
+
+Old kwarg -> new config field: ``tb/policy/eps_target/ladder/cache_slots/
+compute_dtype/use_pallas/block/ndev`` map 1:1 onto
+:class:`~repro.core.api.CholeskyConfig` fields of the same name;
+``backend`` gains an ``"auto"`` default (jax single-device, numpy
+multi-device), and combinations the old entry point silently ignored for
+``ndev > 1`` (explicit ``backend="jax"``, ``compute_dtype``,
+``use_pallas``) now raise at config construction.
 """
 from __future__ import annotations
 
@@ -27,9 +44,7 @@ import jax
 import jax.numpy as jnp
 import ml_dtypes
 
-from .schedule import (MultiDeviceSchedule, Op, OpKind, Schedule,
-                       build_multidevice_schedule, build_schedule)
-from .tiling import TileLayout, to_tiles, from_tiles
+from .schedule import MultiDeviceSchedule, Op, OpKind, Schedule
 from .precision import PrecisionPlan, assign_precision, tile_norms, uniform_plan
 
 _NP_DTYPES = {
@@ -215,45 +230,59 @@ def ooc_cholesky(
     eps_target: float | None = None,
     ladder: str = "tpu",
     cache_slots: int = 0,
-    backend: str = "jax",
+    backend: str | None = None,
     compute_dtype=None,
     use_pallas: bool = False,
     block: tuple = (4, 4),
     ndev: int = 1,
-) -> tuple[np.ndarray, Schedule | MultiDeviceSchedule]:
-    """Out-of-core mixed-precision Cholesky of SPD matrix ``a``.
+) -> tuple[np.ndarray, MultiDeviceSchedule]:
+    """One-shot out-of-core Cholesky — deprecated shim over the planner API.
 
-    Returns (L, schedule) where L is lower-triangular (upper part zeroed)
-    and ``schedule`` carries the exact data-movement record (Fig. 8/12).
-    ``block`` parameterizes the beyond-paper ``policy="v4"`` variant.
+    .. deprecated:: 0.2
+       Use ``repro.plan(n, CholeskyConfig(...)).compile()`` instead: the
+       static schedule and jitted executor are then built once and reused
+       across every same-shape factorization.  Kwarg migration:
 
-    ``ndev > 1`` factors over the 1D block-cyclic multi-device schedule
-    (paper §IV-D): the returned schedule is a
-    :class:`~repro.core.schedule.MultiDeviceSchedule` with one op stream
-    per device, and the replay always runs on the f64 NumPy multi-device
-    executor — ``backend``, ``compute_dtype``, ``use_pallas``, and
-    ``block`` are ignored (per-device JAX execution needs real devices;
-    see ROADMAP).
+       ============== ===========================================
+       old kwarg      CholeskyConfig field
+       ============== ===========================================
+       tb             ``tb``
+       policy         ``policy``
+       eps_target     ``eps_target`` (freeze via ``specialize(a)``)
+       ladder         ``ladder``
+       cache_slots    ``cache_slots``
+       backend        ``backend`` (new default ``"auto"``)
+       compute_dtype  ``compute_dtype``
+       use_pallas     ``use_pallas``
+       block          ``block``
+       ndev           ``ndev``
+       ============== ===========================================
+
+    Returns ``(L, schedule)`` with L lower-triangular (upper part zeroed)
+    and ``schedule`` the unified
+    :class:`~repro.core.schedule.MultiDeviceSchedule` (ndev=1 degenerate
+    for the single-device path) carrying the exact data-movement record.
+
+    Unsupported combinations now raise eagerly from config validation —
+    notably ``ndev > 1`` with an explicit ``backend="jax"``,
+    ``compute_dtype``, or ``use_pallas``, which the pre-0.2 API silently
+    ignored.
     """
-    if ndev < 1:
-        raise ValueError(f"ndev must be >= 1, got {ndev}")
-    layout = TileLayout(a.shape[0], tb)
-    tiles = to_tiles(np.asarray(a, dtype=np.float64), tb)
-    plan = plan_for_matrix(tiles, eps_target, ladder)
-    if ndev > 1:
-        msched = build_multidevice_schedule(layout.nt, tb, ndev, policy,
-                                            cache_slots, plan)
-        out = run_multidevice_numpy(tiles, msched)
-        return np.tril(from_tiles(out)), msched
-    sched = build_schedule(layout.nt, tb, policy, cache_slots, plan,
-                           block=block)
-    if backend == "numpy":
-        out = run_schedule_numpy(tiles, sched)
-    elif backend == "jax":
-        dt = compute_dtype or (jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
-        fn = jax.jit(make_jax_executor(sched, dt, use_pallas=use_pallas))
-        out = np.asarray(fn(jnp.asarray(tiles, dtype=dt)), dtype=np.float64)
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
-    full = from_tiles(out)
-    return np.tril(full), sched
+    import warnings
+
+    from .api import CholeskyConfig, plan as _plan
+
+    warnings.warn(
+        "ooc_cholesky() is deprecated: use "
+        "repro.plan(n, CholeskyConfig(...)).compile() to amortize the "
+        "schedule build and jit across factorizations",
+        DeprecationWarning, stacklevel=2)
+    a = np.asarray(a, dtype=np.float64)
+    cfg = CholeskyConfig(
+        tb=tb, policy=policy, eps_target=eps_target, ladder=ladder,
+        cache_slots=cache_slots, backend=backend or "auto",
+        compute_dtype=compute_dtype, use_pallas=use_pallas, block=block,
+        ndev=ndev,
+    ).specialize(a)
+    solver = _plan(a.shape[0], cfg).compile()
+    return solver.factor(a), solver.schedule

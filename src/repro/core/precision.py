@@ -41,13 +41,30 @@ LADDERS = {
 BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1}
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class PrecisionPlan:
-    """Per-tile precision classes for one factorization."""
+    """Per-tile precision classes for one factorization.
+
+    Value-hashable (classes compared/hashed by content) so that a plan can
+    key the ``(n, config)`` solver cache of :mod:`repro.core.api`.
+    """
 
     classes: np.ndarray        # [Nt, Nt] int8, class index into `ladder`
     ladder: tuple[str, ...]    # precision names, high -> low
     eps_target: float
+
+    def __eq__(self, other) -> bool:
+        return (
+            isinstance(other, PrecisionPlan)
+            and self.ladder == other.ladder
+            and self.eps_target == other.eps_target
+            and self.classes.shape == other.classes.shape
+            and np.array_equal(self.classes, other.classes)
+        )
+
+    def __hash__(self) -> int:
+        return hash((self.ladder, self.eps_target, self.classes.shape,
+                     self.classes.tobytes()))
 
     @property
     def nt(self) -> int:

@@ -80,6 +80,12 @@ class Op:
     src: int = -1            # source device (BCAST/RECV only)
 
 
+def _ops_digest_update(h, ops) -> None:
+    for o in ops:
+        h.update((f"{o.kind.value}:{o.i},{o.j},{o.slot_c},{o.slot_a},"
+                  f"{o.slot_b},{o.cls},{o.bytes},{o.k},{o.src};").encode())
+
+
 @dataclasses.dataclass
 class Schedule:
     ops: list[Op]
@@ -105,6 +111,13 @@ class Schedule:
 
     def count(self, kind: OpKind) -> int:
         return sum(1 for o in self.ops if o.kind is kind)
+
+    def digest(self) -> str:
+        """Content hash of the op stream (golden-schedule regression)."""
+        import hashlib
+        h = hashlib.sha256()
+        _ops_digest_update(h, self.ops)
+        return h.hexdigest()[:16]
 
 
 class _CacheTable:
@@ -473,6 +486,14 @@ class MultiDeviceSchedule:
     only cross-stream edges are BCAST (owner) -> RECV (peers) pairs, which
     carry the per-column panel-row broadcast.  ``hits``/``misses``/
     ``evictions`` are per-device cache-table counters (v2/v3 only).
+
+    This is the *unified* schedule type of the public API: a single-device
+    :class:`Schedule` is represented as its ``ndev=1`` degenerate form via
+    :meth:`from_single` (one stream, no BCAST/RECV), so planners and
+    executors expose one type instead of the old
+    ``Schedule | MultiDeviceSchedule`` union.  :meth:`to_single` recovers
+    the flat view where a single op list is needed (executors, the
+    three-engine simulator).
     """
     streams: list[list[Op]]
     nt: int
@@ -484,6 +505,27 @@ class MultiDeviceSchedule:
     hits: list[int] = dataclasses.field(default_factory=list)
     misses: list[int] = dataclasses.field(default_factory=list)
     evictions: list[int] = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def from_single(cls, sched: Schedule) -> "MultiDeviceSchedule":
+        """Wrap a single-device schedule as the ndev=1 degenerate form."""
+        return cls(streams=[list(sched.ops)], nt=sched.nt, tb=sched.tb,
+                   ndev=1, policy=sched.policy, cache_slots=sched.cache_slots,
+                   plan=sched.plan, hits=[sched.hits], misses=[sched.misses],
+                   evictions=[sched.evictions])
+
+    def to_single(self) -> Schedule:
+        """Flat single-device view; only valid for the ndev=1 degenerate."""
+        if self.ndev != 1:
+            raise ValueError(
+                f"schedule has ndev={self.ndev}; only the ndev=1 degenerate "
+                "form has a single-device view (use the per-device streams "
+                "or simulate_multi/volume_report_multi)")
+        return Schedule(list(self.streams[0]), self.nt, self.tb, self.policy,
+                        self.cache_slots, self.plan,
+                        hits=self.hits[0] if self.hits else 0,
+                        misses=self.misses[0] if self.misses else 0,
+                        evictions=self.evictions[0] if self.evictions else 0)
 
     def _bytes(self, kind: OpKind, dev: Optional[int]) -> int:
         streams = self.streams if dev is None else [self.streams[dev]]
@@ -506,6 +548,15 @@ class MultiDeviceSchedule:
     def flops(self) -> float:
         n = self.nt * self.tb
         return n**3 / 3.0
+
+    def digest(self) -> str:
+        """Content hash over all device streams (golden-schedule tests)."""
+        import hashlib
+        h = hashlib.sha256()
+        for d, stream in enumerate(self.streams):
+            h.update(f"|dev{d}|".encode())
+            _ops_digest_update(h, stream)
+        return h.hexdigest()[:16]
 
     def iter_column_order(self):
         """Yield ``(device, op)`` column-by-column, the column owner first.

@@ -5,6 +5,13 @@
 log|Σ| = 2 Σ_i log L_ii and yᵀΣ⁻¹y = ‖L⁻¹y‖² via one triangular solve.
 The factor comes from any policy/precision of ``repro.core`` — this module
 is precision-agnostic and is what the KL-divergence assessment drives.
+
+Both entry points accept either a dense lower factor (ndarray) or a
+factored :class:`~repro.core.api.OOCSolver`: the solver path never
+materializes the dense n x n factor — log|Σ| comes off the diagonal tiles
+and the quad form runs through the blocked forward substitution of
+``repro.core.solve``, which is how the MLE loop in
+``examples/geospatial_mle.py`` evaluates ℓ out-of-core.
 """
 from __future__ import annotations
 
@@ -12,8 +19,18 @@ import numpy as np
 import scipy.linalg as sla
 
 
-def loglik_terms_from_factor(l: np.ndarray, y: np.ndarray | None = None):
-    """(logdet, quad) from a lower Cholesky factor (NaN-safe logdet)."""
+def _is_solver(obj) -> bool:
+    return hasattr(obj, "solve_lower") and hasattr(obj, "logdet")
+
+
+def loglik_terms_from_factor(l, y: np.ndarray | None = None):
+    """(logdet, quad) from a lower Cholesky factor or a factored solver."""
+    if _is_solver(l):
+        logdet = l.logdet()
+        if y is None:
+            return logdet, 0.0
+        z = l.solve_lower(np.asarray(y, dtype=np.float64))
+        return logdet, float(z @ z)
     diag = np.diag(l)
     logdet = 2.0 * np.sum(np.log(diag))
     if y is None:
@@ -22,7 +39,7 @@ def loglik_terms_from_factor(l: np.ndarray, y: np.ndarray | None = None):
     return logdet, float(z @ z)
 
 
-def gaussian_loglik(l: np.ndarray, y: np.ndarray | None = None) -> float:
-    n = l.shape[0]
+def gaussian_loglik(l, y: np.ndarray | None = None) -> float:
+    n = l.n if _is_solver(l) else l.shape[0]
     logdet, quad = loglik_terms_from_factor(l, y)
     return float(-0.5 * n * np.log(2.0 * np.pi) - 0.5 * logdet - 0.5 * quad)
