@@ -17,24 +17,29 @@ Public surface — the two-phase planner/executor API::
 
 The one-shot :func:`ooc_cholesky` remains as a deprecated shim.
 """
-from repro.core.analytics import (HW, HardwareModel, ascii_trace, simulate,
+from repro.core.analytics import (HW, HardwareModel, ascii_trace,
+                                  crosscheck_executed_volume, simulate,
                                   simulate_multi, volume_report,
                                   volume_report_multi)
 from repro.core.api import (CholeskyConfig, CholeskyPlan, OOCSolver,
                             clear_plan_cache, plan)
-from repro.core.cholesky import ooc_cholesky, plan_for_matrix
+from repro.core.cholesky import (MultiDeviceJaxExecutor,
+                                 make_multidevice_jax_executor, ooc_cholesky,
+                                 plan_for_matrix)
 from repro.core.precision import (LADDERS, PrecisionPlan, assign_precision,
                                   uniform_plan)
 from repro.core.schedule import (MultiDeviceSchedule, Op, OpKind, Schedule,
                                  build_multidevice_schedule, build_schedule)
 from repro.core.tiling import TileLayout, from_tiles, random_spd, to_tiles
 
-__version__ = "0.2.0"
+__version__ = "0.3.0"
 
 __all__ = [
     "__version__",
     # planner/executor API
     "CholeskyConfig", "CholeskyPlan", "OOCSolver", "plan", "clear_plan_cache",
+    # executors
+    "MultiDeviceJaxExecutor", "make_multidevice_jax_executor",
     # one-shot shim + precision planning
     "ooc_cholesky", "plan_for_matrix",
     "PrecisionPlan", "assign_precision", "uniform_plan", "LADDERS",
@@ -44,6 +49,7 @@ __all__ = [
     # analytics
     "HardwareModel", "HW", "simulate", "simulate_multi",
     "volume_report", "volume_report_multi", "ascii_trace",
+    "crosscheck_executed_volume",
     # tiling
     "TileLayout", "to_tiles", "from_tiles", "random_spd",
 ]

@@ -262,12 +262,8 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
     tb, lad, ndev = msched.tb, msched.plan.ladder, msched.ndev
     overlap = msched.policy != "sync"
 
-    def _nslots(stream):
-        return max((max(o.slot_c, o.slot_a, o.slot_b) for o in stream),
-                   default=-1) + 1
-
-    ready = [[0.0] * _nslots(s) for s in msched.streams]
-    reads = [[0.0] * _nslots(s) for s in msched.streams]
+    ready = [[0.0] * msched.stream_nslots(d) for d in range(ndev)]
+    reads = [[0.0] * msched.stream_nslots(d) for d in range(ndev)]
     host_ready = {}
     t_h2d = [0.0] * ndev
     t_d2h = [0.0] * ndev
@@ -394,6 +390,46 @@ def volume_report_multi(msched: MultiDeviceSchedule) -> dict:
         "matrix_bytes": 8 * (msched.nt * msched.tb) ** 2,
         "per_device": per_device,
     }
+
+
+def crosscheck_executed_volume(msched: MultiDeviceSchedule, executed: dict,
+                               hw: HardwareModel | None = None) -> dict:
+    """Check an executor's *executed* transfer counters against the model.
+
+    ``executed`` is the counter dict a real executor reports after a run
+    (:attr:`MultiDeviceJaxExecutor.last_transfer_stats` /
+    ``OOCSolver.transfer_stats()``): BCAST/RECV op counts and the bytes
+    that actually crossed the interconnect.  The static-schedule claim is
+    that these are knowable ahead of time — so they must equal, exactly,
+    the op stream's own accounting and (when ``hw`` is given) the bytes
+    :func:`simulate_multi` pushes through its shared link engine.
+
+    Returns ``{"match": bool, "expected": ..., "executed": ...,
+    "mismatches": {field: (expected, executed)}}``.  Note the byte-level
+    check assumes the executor's wire format is the tile class (true with
+    x64 enabled; with x64 off the f64 class degrades to 4-byte words and
+    the byte fields will report a mismatch — the op counts still hold).
+    """
+    if executed is None:
+        raise ValueError(
+            "no executed transfer counters: the last factor() did not run "
+            "the multi-device jax executor (transfer_stats() is None on "
+            "the numpy replay and single-device backends)")
+    expected = {
+        "bcast_ops": msched.count(OpKind.BCAST),
+        "recv_ops": msched.count(OpKind.RECV),
+        "bcast_bytes": sum(o.bytes for s in msched.streams for o in s
+                           if o.kind is OpKind.BCAST),
+        "recv_bytes": msched.bcast_bytes(),
+    }
+    if hw is not None:
+        expected["simulated_link_bytes"] = simulate_multi(msched, hw).link_bytes
+        executed = dict(executed,
+                        simulated_link_bytes=executed.get("recv_bytes"))
+    mismatches = {k: (v, executed.get(k)) for k, v in expected.items()
+                  if executed.get(k) != v}
+    return {"match": not mismatches, "expected": expected,
+            "executed": executed, "mismatches": mismatches}
 
 
 def ascii_trace(result: SimResult, width: int = 100) -> str:

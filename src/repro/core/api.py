@@ -27,10 +27,14 @@ Phases:
   :class:`~repro.core.schedule.MultiDeviceSchedule`; ``ndev=1`` is its
   degenerate single-stream form.
 * :meth:`CholeskyPlan.compile` — builds the executor (one ``jax.jit``
-  trace for the JAX backend) exactly once per plan and returns a
-  :class:`OOCSolver` over it.  The solver is fresh per ``compile()``
-  call — factored state is never shared between call sites — but every
-  solver of a plan replays the same compiled executor.
+  trace for the JAX backend; for ``ndev > 1`` one jitted column-segment
+  sequence per device stream with device-to-device panel broadcasts —
+  :class:`~repro.core.cholesky.MultiDeviceJaxExecutor`) exactly once per
+  plan and returns a :class:`OOCSolver` over it.  The solver is fresh per
+  ``compile()`` call — factored state is never shared between call
+  sites — but every solver of a plan replays the same compiled executor.
+  ``backend="auto"`` resolves multi-device configs to jax whenever the
+  process sees at least ``ndev`` devices, else to the NumPy host replay.
 
 Mixed precision: an ``eps_target`` plan depends on the matrix values
 (tile norms), so a *reusable* solver needs the plan frozen up front —
@@ -72,7 +76,7 @@ class CholeskyConfig:
     ladder: str = "tpu"                       # precision ladder name
     plan: Optional[PrecisionPlan] = None      # explicit per-tile classes
     cache_slots: int = 0                      # 0 = policy default
-    backend: str = "auto"                     # auto -> jax (ndev=1) / numpy
+    backend: str = "auto"                     # auto -> jax if devices suffice
     compute_dtype: Any = None                 # jax backend compute dtype
     use_pallas: bool = False                  # Pallas tile kernels (jax)
     block: tuple = _DEFAULT_BLOCK             # v4 (h, w) update block
@@ -116,37 +120,39 @@ class CholeskyConfig:
                 raise ValueError(
                     f"v4 with block={self.block} needs >= h*w + w + 2 = "
                     f"{h * w + w + 2} cache slots, got {self.cache_slots}")
-        if self.ndev > 1:
-            # These were the four kwargs ooc_cholesky used to ignore
-            # silently for ndev > 1 — they now fail eagerly.
-            if self.policy not in _MULTIDEV_POLICIES:
-                raise ValueError(
-                    f"multi-device schedules support sync/v1/v2/v3, "
-                    f"got {self.policy!r}")
-            if self.backend == "jax":
-                raise ValueError(
-                    "backend='jax' is not supported with ndev > 1: the "
-                    "multi-device replay runs on the f64 NumPy executor "
-                    "(per-device JAX execution needs real devices, see "
-                    "ROADMAP); use backend='auto' or 'numpy'")
-            if self.use_pallas:
-                raise ValueError("use_pallas is not supported with ndev > 1")
-            if self.compute_dtype is not None:
-                raise ValueError(
-                    "compute_dtype is not supported with ndev > 1 (the "
-                    "multi-device replay is f64 NumPy)")
+        if self.ndev > 1 and self.policy not in _MULTIDEV_POLICIES:
+            raise ValueError(
+                f"multi-device schedules support sync/v1/v2/v3, "
+                f"got {self.policy!r}")
         if self.use_pallas and self.resolved_backend() != "jax":
             raise ValueError("use_pallas requires the 'jax' backend, "
-                             f"got backend={self.backend!r}")
+                             f"got backend={self.backend!r} "
+                             f"(resolved {self.resolved_backend()!r})")
         if self.compute_dtype is not None and self.resolved_backend() != "jax":
             raise ValueError("compute_dtype is only supported on the 'jax' "
-                             f"backend, got backend={self.backend!r}")
+                             f"backend, got backend={self.backend!r} "
+                             f"(resolved {self.resolved_backend()!r})")
 
     def resolved_backend(self) -> str:
-        """'auto' resolves to 'jax' single-device, 'numpy' multi-device."""
+        """Backend ``'auto'`` actually runs on.
+
+        Single-device resolves to ``'jax'``.  Multi-device resolves to
+        ``'jax'`` whenever the process sees at least ``ndev`` JAX devices
+        (the per-device executor replays the streams on real devices) and
+        falls back to the ``'numpy'`` host replay otherwise.  An explicit
+        ``backend='jax'`` with too few devices raises at ``compile()``
+        instead of silently degrading.
+        """
         if self.backend != "auto":
             return self.backend
-        return "numpy" if self.ndev > 1 else "jax"
+        if self.ndev == 1:
+            return "jax"
+        try:
+            import jax
+            n_visible = len(jax.devices())
+        except Exception:
+            return "numpy"
+        return "jax" if n_visible >= self.ndev else "numpy"
 
     def specialize(self, a: np.ndarray) -> "CholeskyConfig":
         """Freeze the matrix-dependent precision plan into the config.
@@ -237,7 +243,10 @@ class OOCSolver:
                 f"n={self.n}; build a new plan for a different size")
         tiles = to_tiles(a, self._plan.config.tb)
         cfg = self._plan.config
-        if cfg.ndev > 1:
+        if self._executor.multidevice is not None:
+            # per-device jitted streams + device-to-device panel broadcast
+            out = self._executor.fn(tiles)
+        elif cfg.ndev > 1:
             from .cholesky import run_multidevice_numpy
             out = run_multidevice_numpy(tiles, self._plan.schedule)
         elif cfg.resolved_backend() == "numpy":
@@ -279,6 +288,14 @@ class OOCSolver:
         from .solve import logdet_tiles
         return logdet_tiles(self._factored_tiles())
 
+    def transfer_stats(self) -> Optional[dict]:
+        """Executed BCAST/RECV op and byte counters of the last
+        ``factor()`` on the multi-device JAX backend (None elsewhere);
+        cross-check against the static schedule and the event simulator
+        with :func:`repro.core.analytics.crosscheck_executed_volume`."""
+        mdx = self._executor.multidevice
+        return None if mdx is None else mdx.last_transfer_stats
+
 
 def _resolved_dtype(cfg: CholeskyConfig):
     """Compute dtype the jax executor would use *right now* (None for
@@ -296,25 +313,45 @@ def _resolved_dtype(cfg: CholeskyConfig):
 class _CompiledExecutor:
     """The per-plan compiled artifact: built once per compute dtype,
     shared by every solver of the plan.  Holds no factored data — only
-    the jitted function (JAX backend) and its trace counter."""
+    the jitted function(s) (JAX backend) and the trace counter.
+
+    For ``ndev > 1`` on the JAX backend this holds a
+    :class:`~repro.core.cholesky.MultiDeviceJaxExecutor` — one jitted
+    column-segment sequence per device stream, BCAST/RECV edges as
+    device-to-device transfers; building it verifies that enough devices
+    are visible (RuntimeError otherwise)."""
 
     def __init__(self, plan: "CholeskyPlan"):
-        self.jit_traces = 0
+        self._jit_traces = 0
         self.fn = None
+        self.multidevice = None    # MultiDeviceJaxExecutor (jax, ndev > 1)
         cfg = plan.config
         self.dtype = _resolved_dtype(cfg)
-        if cfg.resolved_backend() == "jax":
-            import jax
-            from .cholesky import make_jax_executor
-            raw = make_jax_executor(plan.single_schedule(), self.dtype,
-                                    use_pallas=cfg.use_pallas)
+        if cfg.resolved_backend() != "jax":
+            return
+        import jax
+        if cfg.ndev > 1:
+            from .cholesky import make_multidevice_jax_executor
+            self.multidevice = make_multidevice_jax_executor(
+                plan.schedule, self.dtype, use_pallas=cfg.use_pallas)
+            self.fn = self.multidevice
+            return
+        from .cholesky import make_jax_executor
+        raw = make_jax_executor(plan.single_schedule(), self.dtype,
+                                use_pallas=cfg.use_pallas)
 
-            def traced(host_tiles):
-                # body runs only while tracing: counts jit compilations
-                self.jit_traces += 1
-                return raw(host_tiles)
+        def traced(host_tiles):
+            # body runs only while tracing: counts jit compilations
+            self._jit_traces += 1
+            return raw(host_tiles)
 
-            self.fn = jax.jit(traced)
+        self.fn = jax.jit(traced)
+
+    @property
+    def jit_traces(self) -> int:
+        if self.multidevice is not None:
+            return self.multidevice.jit_traces
+        return self._jit_traces
 
 
 @dataclasses.dataclass

@@ -1,15 +1,22 @@
 """Executors for the statically scheduled OOC tile Cholesky.
 
-Two interpreters for the :class:`~repro.core.schedule.Schedule` op stream:
+Three executors over the static op streams:
 
-* ``run_schedule_numpy``  — plain NumPy oracle (any size, any policy).
-* ``run_schedule_jax``    — the op stream is *unrolled into a single jit*:
+* ``run_schedule_numpy`` / ``run_multidevice_numpy`` — plain NumPy
+  oracles (any size, any policy; one host store shared by all streams).
+* ``make_jax_executor``   — the op stream is *unrolled into a single jit*:
   LOAD/STORE become dynamic slices between the host tile store and a bounded
   ``slots`` buffer (the "GPU memory"); compute ops run on slots.  On TPU the
   host store is placed with ``memory_kind='pinned_host'`` so the LOAD/STORE
   slices lower to asynchronous host<->HBM DMAs that XLA overlaps with the
   MXU work — the TPU equivalent of the paper's multi-stream ``async`` engine
   (DESIGN.md §2).  On CPU the same program runs with a device-resident store.
+* ``make_multidevice_jax_executor`` — the per-device op streams of a
+  :class:`~repro.core.schedule.MultiDeviceSchedule` on real JAX devices:
+  one jitted column-segment sequence per device (same unrolled machinery
+  and kernel fns as the single-device executor), the BCAST/RECV edges
+  lowered to class-precision ``jax.device_put`` transfers into each
+  peer's dedicated panel slot (see :class:`MultiDeviceJaxExecutor`).
 
 Mixed precision: LOAD casts host(f64) -> tile class -> compute dtype, i.e.
 the interconnect carries class-precision bytes ("on-the-fly down-casting",
@@ -29,10 +36,11 @@ compiled solver across same-shape factorizations::
 Old kwarg -> new config field: ``tb/policy/eps_target/ladder/cache_slots/
 compute_dtype/use_pallas/block/ndev`` map 1:1 onto
 :class:`~repro.core.api.CholeskyConfig` fields of the same name;
-``backend`` gains an ``"auto"`` default (jax single-device, numpy
-multi-device), and combinations the old entry point silently ignored for
-``ndev > 1`` (explicit ``backend="jax"``, ``compute_dtype``,
-``use_pallas``) now raise at config construction.
+``backend`` gains an ``"auto"`` default: jax single-device, and for
+``ndev > 1`` jax whenever the process sees at least ``ndev`` devices
+(the per-device executor) with the NumPy host replay as the fallback.
+An explicit ``backend="jax"`` with too few visible devices raises at
+``compile()``.
 """
 from __future__ import annotations
 
@@ -46,6 +54,7 @@ import ml_dtypes
 
 from .schedule import MultiDeviceSchedule, Op, OpKind, Schedule
 from .precision import PrecisionPlan, assign_precision, tile_norms, uniform_plan
+from .tiling import TileLayout
 
 _NP_DTYPES = {
     "f64": np.float64,
@@ -124,11 +133,8 @@ def run_multidevice_numpy(host_tiles: np.ndarray,
     host = host_tiles.astype(np.float64).copy()
     tb = msched.tb
     lad = msched.plan.ladder
-    slots = []
-    for stream in msched.streams:
-        ns = max((max(o.slot_c, o.slot_a, o.slot_b) for o in stream),
-                 default=-1) + 1
-        slots.append(np.zeros((ns, tb, tb), dtype=np.float64))
+    slots = [np.zeros((msched.stream_nslots(d), tb, tb), dtype=np.float64)
+             for d in range(msched.ndev)]
     for d, op in msched.iter_column_order():
         _np_interpret_op(host, slots[d], op, lad)
     return host
@@ -168,6 +174,36 @@ def _make_kernel_fns(use_pallas: bool, interpret: bool):
     }
 
 
+def _jx_interpret_op(host, slots, op: Op, lad, kf, compute_dtype, lrow):
+    """Trace one op against a (host store, slot buffer) pair.
+
+    The single unrolled-op semantics shared by the single-device executor
+    and every per-device segment of the multi-device executor; ``lrow``
+    maps a global tile row to the host store's row index (identity for a
+    full store, ``i // ndev`` for a device's block-cyclic row slab).
+    Returns the updated ``(host, slots)``.
+    """
+    if op.kind is OpKind.LOAD:
+        t = _jx_round(host[lrow(op.i), op.j], lad[op.cls], compute_dtype)
+        slots = slots.at[op.slot_c].set(t)
+    elif op.kind is OpKind.STORE:
+        r = _jx_round(slots[op.slot_c], lad[op.cls], compute_dtype)
+        slots = slots.at[op.slot_c].set(r)
+        host = host.at[lrow(op.i), op.j].set(r)
+    elif op.kind is OpKind.SYRK:
+        slots = slots.at[op.slot_c].set(
+            kf["syrk"](slots[op.slot_c], slots[op.slot_a]))
+    elif op.kind is OpKind.GEMM:
+        slots = slots.at[op.slot_c].set(
+            kf["gemm"](slots[op.slot_c], slots[op.slot_a], slots[op.slot_b]))
+    elif op.kind is OpKind.POTRF:
+        slots = slots.at[op.slot_c].set(kf["potrf"](slots[op.slot_c]))
+    elif op.kind is OpKind.TRSM:
+        slots = slots.at[op.slot_c].set(
+            kf["trsm"](slots[op.slot_a], slots[op.slot_c]))
+    return host, slots
+
+
 def make_jax_executor(sched: Schedule, compute_dtype=jnp.float64,
                       use_pallas: bool = False, interpret: bool = True):
     """Build a jit-able ``host_tiles -> factored host_tiles`` function.
@@ -184,30 +220,223 @@ def make_jax_executor(sched: Schedule, compute_dtype=jnp.float64,
     def run(host_tiles):
         host = host_tiles.astype(compute_dtype)
         slots = jnp.zeros((nslots, tb, tb), dtype=compute_dtype)
-
-        def get(s):
-            return slots[s]
-
         for op in sched.ops:
-            if op.kind is OpKind.LOAD:
-                t = _jx_round(host[op.i, op.j], lad[op.cls], compute_dtype)
-                slots = slots.at[op.slot_c].set(t)
-            elif op.kind is OpKind.STORE:
-                r = _jx_round(get(op.slot_c), lad[op.cls], compute_dtype)
-                slots = slots.at[op.slot_c].set(r)
-                host = host.at[op.i, op.j].set(r)
-            elif op.kind is OpKind.SYRK:
-                slots = slots.at[op.slot_c].set(kf["syrk"](get(op.slot_c), get(op.slot_a)))
-            elif op.kind is OpKind.GEMM:
-                slots = slots.at[op.slot_c].set(
-                    kf["gemm"](get(op.slot_c), get(op.slot_a), get(op.slot_b)))
-            elif op.kind is OpKind.POTRF:
-                slots = slots.at[op.slot_c].set(kf["potrf"](get(op.slot_c)))
-            elif op.kind is OpKind.TRSM:
-                slots = slots.at[op.slot_c].set(kf["trsm"](get(op.slot_a), get(op.slot_c)))
+            host, slots = _jx_interpret_op(host, slots, op, lad, kf,
+                                           compute_dtype, lambda i: i)
         return host
 
     return run
+
+
+# --------------------------------------------------------------------------
+# Multi-device JAX executor (one jitted column segment per device stream)
+# --------------------------------------------------------------------------
+
+def _wire_dtype(cls_name: str, compute_dtype):
+    """Dtype a broadcast tile travels in: the tile's precision class (the
+    interconnect carries class-precision bytes, paper §IV-C), degraded to
+    the compute dtype when the f64 class is unavailable (x64 off)."""
+    if cls_name == "f64" and not jax.config.jax_enable_x64:
+        return compute_dtype
+    return _JNP_DTYPES[cls_name]
+
+
+class MultiDeviceJaxExecutor:
+    """Replay a :class:`MultiDeviceSchedule` on ``ndev`` real JAX devices.
+
+    Each device stream is compiled as a sequence of *column segments* —
+    unrolled jitted programs (same op semantics and kernel fns as the
+    single-device executor) operating on that device's block-cyclic row
+    slab ``[ceil(Nt/ndev), Nt, tb, tb]`` and its private slot buffer.  The
+    ``BCAST``/``RECV`` cross-stream edges are the only points where data
+    leaves a device: the owner's segment returns the finalized panel-row
+    tiles rounded to their class (wire) dtype, and :func:`jax.device_put`
+    moves each tile to every peer, where the next segment writes it into
+    the dedicated panel slot (``panel_base + n``) its column-``k`` GEMM /
+    TRSM ops read.  Per column ``k`` the dispatch order is::
+
+        owner head (diag update + POTRF + panel-row wire tiles)
+          -> device_put to each peer              (the BCAST/RECV edges)
+          -> owner tail (its own rows of column k)  |  concurrently
+          -> each peer's segment (RECV + its rows)  |  (async dispatch)
+
+    so the owner's trailing update overlaps the peers' broadcasts and
+    updates exactly as in the static schedule's partial order
+    (:meth:`MultiDeviceSchedule.iter_column_order`).
+
+    Numerics are op-for-op those of :func:`run_multidevice_numpy`: a RECV
+    observes the owner's host-coherent tile rounded through its class, so
+    FP64 plans agree with the NumPy replay to BLAS round-off and MxP plans
+    perform the identical rounding events.
+
+    Attributes: ``jit_traces`` counts segment traces (amortization
+    contract: constant across repeated calls); ``last_transfer_stats``
+    holds the executed BCAST/RECV op and byte counters of the most recent
+    run, cross-checkable against the schedule and the event simulator via
+    :func:`repro.core.analytics.crosscheck_executed_volume`.
+    """
+
+    def __init__(self, msched: MultiDeviceSchedule, compute_dtype=jnp.float64,
+                 use_pallas: bool = False, interpret: bool = True,
+                 devices=None):
+        if msched.ndev < 2:
+            raise ValueError(
+                f"MultiDeviceJaxExecutor needs ndev >= 2 (got "
+                f"{msched.ndev}); use make_jax_executor for one device")
+        if devices is None:
+            devices = jax.devices()
+        if len(devices) < msched.ndev:
+            raise RuntimeError(
+                f"multi-device jax executor needs {msched.ndev} devices, "
+                f"found {len(devices)} ({devices[0].platform}); on CPU, "
+                f"set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{msched.ndev} before importing jax, or use "
+                f"backend='numpy'")
+        self.msched = msched
+        self.devices = list(devices[:msched.ndev])
+        self.compute_dtype = compute_dtype
+        self.jit_traces = 0
+        self.last_transfer_stats = None
+        self._kf = _make_kernel_fns(use_pallas, interpret)
+        # ownership comes from the same TileLayout rule the schedule
+        # builder and iter_column_order use; row slab d holds the global
+        # rows it owns, in order, and _local_row inverts that mapping
+        self._layout = TileLayout(msched.nt * msched.tb, msched.tb)
+        self._rows = [
+            [i for i in range(msched.nt)
+             if self._layout.owner(i, msched.ndev) == d]
+            for d in range(msched.ndev)
+        ]
+        self._local_row = [
+            {g: l for l, g in enumerate(rows)} for rows in self._rows
+        ]
+        self._columns = self._build_columns()
+
+    # -- compile-time: split streams into per-column jitted segments -------
+    def _make_segment(self, d: int, ops: list[Op]):
+        """Jit one device-column slice of device ``d``'s stream.
+
+        ``seg(host_slab, slots, recv_tiles) -> (host_slab, slots, wires)``
+        where ``recv_tiles`` match the slice's RECV ops in order and
+        ``wires`` are the class-dtype panel tiles its BCAST ops publish.
+        """
+        msched = self.msched
+        lad, cdt = msched.plan.ladder, self.compute_dtype
+        recv_ops = tuple(o for o in ops if o.kind is OpKind.RECV)
+        bcast_ops = tuple(o for o in ops if o.kind is OpKind.BCAST)
+        body = tuple(o for o in ops
+                     if o.kind is not OpKind.RECV and o.kind is not OpKind.BCAST)
+        lrow = self._local_row[d].__getitem__
+
+        def seg(host, slots, recv_tiles):
+            self.jit_traces += 1        # body runs only while tracing
+            for o, t in zip(recv_ops, recv_tiles):
+                slots = slots.at[o.slot_c].set(t.astype(cdt))
+            for o in body:
+                host, slots = _jx_interpret_op(host, slots, o, lad,
+                                               self._kf, cdt, lrow)
+            wires = tuple(
+                host[lrow(o.i), o.j].astype(_wire_dtype(lad[o.cls], cdt))
+                for o in bcast_ops)
+            return host, slots, wires
+
+        return jax.jit(seg), recv_ops, bcast_ops
+
+    def _build_columns(self):
+        """Group each stream by column step and compile the segments.
+
+        Per column: the owner's ops split at its last BCAST into a *head*
+        (diagonal work + published wire tiles) and a *tail* (its own rows),
+        so peers can start as soon as the panel row is on the wire while
+        the owner's trailing update keeps running.
+        """
+        msched = self.msched
+        nt, ndev = msched.nt, msched.ndev
+        ptr = [0] * ndev
+        columns = []
+        for k in range(nt):
+            ow = self._layout.owner(k, ndev)
+            per_dev = []
+            for d in range(ndev):
+                stream = msched.streams[d]
+                start = ptr[d]
+                while ptr[d] < len(stream) and stream[ptr[d]].k == k:
+                    ptr[d] += 1
+                per_dev.append(stream[start:ptr[d]])
+            ow_ops = per_dev[ow]
+            split = max((i + 1 for i, o in enumerate(ow_ops)
+                         if o.kind is OpKind.BCAST), default=len(ow_ops))
+            head_fn, _, bcast_ops = self._make_segment(ow, ow_ops[:split])
+            tail = ow_ops[split:]
+            tail_fn = self._make_segment(ow, tail)[0] if tail else None
+            peers = []
+            for d in range(ndev):
+                if d == ow or not per_dev[d]:
+                    continue
+                fn, recv_ops, _ = self._make_segment(d, per_dev[d])
+                peers.append((d, fn, recv_ops))
+            columns.append((ow, head_fn, bcast_ops, tail_fn, peers))
+        assert all(ptr[d] == len(msched.streams[d]) for d in range(ndev))
+        return columns
+
+    # -- run time ----------------------------------------------------------
+    def __call__(self, host_tiles: np.ndarray) -> np.ndarray:
+        """Factor the [Nt, Nt, tb, tb] host store; returns it in f64."""
+        msched = self.msched
+        nt, tb, ndev, cdt = msched.nt, msched.tb, msched.ndev, \
+            self.compute_dtype
+        host_tiles = np.asarray(host_tiles, dtype=np.float64)
+        row_slabs = self._rows
+        host_d = [jax.device_put(jnp.asarray(host_tiles[rows], dtype=cdt),
+                                 self.devices[d])
+                  for d, rows in enumerate(row_slabs)]
+        slots_d = [
+            jax.device_put(
+                jnp.zeros((max(msched.stream_nslots(d), 1), tb, tb),
+                          dtype=cdt), self.devices[d])
+            for d in range(ndev)
+        ]
+        stats = {"bcast_ops": 0, "recv_ops": 0,
+                 "bcast_bytes": 0, "recv_bytes": 0}
+        for ow, head_fn, bcast_ops, tail_fn, peers in self._columns:
+            host_d[ow], slots_d[ow], wires = head_fn(host_d[ow],
+                                                     slots_d[ow], ())
+            wire_of = {(o.i, o.j): t for o, t in zip(bcast_ops, wires)}
+            stats["bcast_ops"] += len(bcast_ops)
+            stats["bcast_bytes"] += sum(t.nbytes * (ndev - 1) for t in wires)
+            if tail_fn is not None:       # overlaps the peers (async dispatch)
+                host_d[ow], slots_d[ow], _ = tail_fn(host_d[ow],
+                                                     slots_d[ow], ())
+            for d, fn, recv_ops in peers:
+                recv_tiles = tuple(
+                    jax.device_put(wire_of[(o.i, o.j)], self.devices[d])
+                    for o in recv_ops)
+                stats["recv_ops"] += len(recv_tiles)
+                stats["recv_bytes"] += sum(t.nbytes for t in recv_tiles)
+                host_d[d], slots_d[d], _ = fn(host_d[d], slots_d[d],
+                                              recv_tiles)
+        out = np.empty_like(host_tiles)
+        for d, rows in enumerate(row_slabs):
+            out[rows] = np.asarray(host_d[d], dtype=np.float64)
+        self.last_transfer_stats = stats
+        return out
+
+
+def make_multidevice_jax_executor(msched: MultiDeviceSchedule,
+                                  compute_dtype=jnp.float64,
+                                  use_pallas: bool = False,
+                                  interpret: bool = True,
+                                  devices=None) -> MultiDeviceJaxExecutor:
+    """Build the per-device JAX executor for a multi-device schedule.
+
+    Returns a callable ``host_tiles -> factored host_tiles`` (f64 NumPy in
+    and out) backed by one jitted program sequence per device stream; see
+    :class:`MultiDeviceJaxExecutor`.  Raises ``RuntimeError`` when fewer
+    than ``msched.ndev`` JAX devices are visible.
+    """
+    return MultiDeviceJaxExecutor(msched, compute_dtype,
+                                  use_pallas=use_pallas, interpret=interpret,
+                                  devices=devices)
 
 
 # --------------------------------------------------------------------------
@@ -263,10 +492,12 @@ def ooc_cholesky(
     :class:`~repro.core.schedule.MultiDeviceSchedule` (ndev=1 degenerate
     for the single-device path) carrying the exact data-movement record.
 
-    Unsupported combinations now raise eagerly from config validation —
-    notably ``ndev > 1`` with an explicit ``backend="jax"``,
-    ``compute_dtype``, or ``use_pallas``, which the pre-0.2 API silently
-    ignored.
+    ``ndev > 1`` with ``backend="jax"`` (or ``"auto"`` with enough
+    visible devices) runs the per-device JAX executor
+    (:class:`MultiDeviceJaxExecutor`); with too few devices an explicit
+    ``"jax"`` raises ``RuntimeError`` at compile.  Unsupported
+    combinations (``async``/``v4`` multi-device, pallas or compute_dtype
+    on a numpy-resolved backend) raise eagerly from config validation.
     """
     import warnings
 

@@ -20,12 +20,19 @@ update sweep is a single masked einsum (full-width contraction against
 the zero-padded broadcast row), trading ≤2x redundant MXU flops for a
 scan-free, layout-stable inner step.
 
-The *static-schedule* counterpart of this runtime lives in
-``schedule.build_multidevice_schedule`` (per-device op streams with
-BCAST/RECV edges) + ``analytics.simulate_multi`` + the NumPy replay in
-``cholesky.run_multidevice_numpy``; :func:`modeled_scaling` below ties
-them together so the Fig. 9 scaling argument comes from the exact same
-op streams an executor would replay.
+Role in 0.3+: this shard_map einsum path is the *reference baseline* for
+the multi-device executors.  The production path is the static-schedule
+stack — ``schedule.build_multidevice_schedule`` (per-device op streams
+with BCAST/RECV edges) replayed on real devices by
+``cholesky.make_multidevice_jax_executor`` (one jitted column-segment
+sequence per device, device-to-device panel transfers), with
+``analytics.simulate_multi`` as its exact event model and
+``cholesky.run_multidevice_numpy`` as the host-side oracle.  The
+equivalence suite (``tests/test_backend_equivalence.py``) pins all of
+them against each other and against LAPACK; :func:`modeled_scaling`
+below ties the Fig. 9 scaling argument to the exact op streams the
+executor replays.  Keep this path dependency-light and *simple* — its
+value is being an independently-derived answer, not being fast.
 """
 from __future__ import annotations
 
@@ -34,7 +41,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+
+try:                                      # jax >= 0.6: top-level export
+    from jax import shard_map
+except ImportError:                       # older jax: experimental home
+    from jax.experimental.shard_map import shard_map
 
 from .tiling import to_tiles, from_tiles
 

@@ -487,6 +487,14 @@ class MultiDeviceSchedule:
     carry the per-column panel-row broadcast.  ``hits``/``misses``/
     ``evictions`` are per-device cache-table counters (v2/v3 only).
 
+    ``panel_base`` is the executor-facing slot contract: every slot id
+    ``>= panel_base`` is a *panel slot* — the dedicated landing region for
+    RECVed row-``k`` tiles (tile ``(k, n)`` lands in ``panel_base + n``),
+    outside the cache table's managed range, so a broadcast tile can never
+    be evicted by a device-local operand load.  Executors (the NumPy
+    replay and the per-device JAX executor) size each device's slot
+    buffer with :meth:`stream_nslots`.
+
     This is the *unified* schedule type of the public API: a single-device
     :class:`Schedule` is represented as its ``ndev=1`` degenerate form via
     :meth:`from_single` (one stream, no BCAST/RECV), so planners and
@@ -505,6 +513,7 @@ class MultiDeviceSchedule:
     hits: list[int] = dataclasses.field(default_factory=list)
     misses: list[int] = dataclasses.field(default_factory=list)
     evictions: list[int] = dataclasses.field(default_factory=list)
+    panel_base: int = -1     # first panel slot id; -1 = no panel region
 
     @classmethod
     def from_single(cls, sched: Schedule) -> "MultiDeviceSchedule":
@@ -513,6 +522,12 @@ class MultiDeviceSchedule:
                    ndev=1, policy=sched.policy, cache_slots=sched.cache_slots,
                    plan=sched.plan, hits=[sched.hits], misses=[sched.misses],
                    evictions=[sched.evictions])
+
+    def stream_nslots(self, dev: int) -> int:
+        """Slot-buffer length device ``dev``'s stream requires (cache slots
+        actually referenced plus its RECV panel region)."""
+        return max((max(o.slot_c, o.slot_a, o.slot_b)
+                    for o in self.streams[dev]), default=-1) + 1
 
     def to_single(self) -> Schedule:
         """Flat single-device view; only valid for the ndev=1 degenerate."""
@@ -550,11 +565,23 @@ class MultiDeviceSchedule:
         return n**3 / 3.0
 
     def digest(self) -> str:
-        """Content hash over all device streams (golden-schedule tests)."""
+        """Content hash over all device streams (golden-schedule tests).
+
+        For ``ndev > 1`` the hash also pins the executor-facing metadata
+        (``panel_base`` and each stream's slot-buffer length): the JAX
+        executor sizes and addresses device buffers from these, so a
+        change there is as execution-visible as a reordered op.  The
+        ndev=1 degenerate hashes ops only, keeping
+        ``from_single(s).digest()`` equal to the planner's digest.
+        """
         import hashlib
         h = hashlib.sha256()
+        if self.ndev > 1:
+            h.update(f"|panel{self.panel_base}|".encode())
         for d, stream in enumerate(self.streams):
             h.update(f"|dev{d}|".encode())
+            if self.ndev > 1:
+                h.update(f"slots{self.stream_nslots(d)}|".encode())
             _ops_digest_update(h, stream)
         return h.hexdigest()[:16]
 
@@ -747,7 +774,8 @@ def build_multidevice_schedule(
             caches[ow].unpin(diag_slot)
 
     msched = MultiDeviceSchedule(streams, nt, tb, ndev, policy, cache_slots,
-                                 plan)
+                                 plan, panel_base=panel_base if ndev > 1
+                                 else -1)
     if operand_cache:
         msched.hits = [c.hits for c in caches]
         msched.misses = [c.misses for c in caches]

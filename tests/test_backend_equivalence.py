@@ -1,0 +1,225 @@
+"""Cross-backend equivalence: the multi-device JAX executor against every
+other way this repo can factor a matrix.
+
+The correctness risk of distributed task replay lives in the
+communication edges (the BCAST/RECV panel broadcast), so each case pins a
+*three-way* equality on real (host-platform) devices:
+
+    multi-device JAX executor  ==  run_multidevice_numpy  ==  LAPACK
+
+plus, for FP64, the independently-derived shard_map einsum baseline in
+``core/distributed.py`` — four implementations, two of which share no
+code with the static-schedule stack.  The executed BCAST/RECV transfer
+counters are cross-checked against the static schedule and the event
+simulator (``analytics.crosscheck_executed_volume``): the static-schedule
+claim is that the executed bytes are knowable before execution.
+
+Multi-device cases run in a subprocess with
+``--xla_force_host_platform_device_count`` (pattern from
+``test_distributed.py``; the main pytest process keeps the real
+single-device view).  ``async``/``v4`` have no multi-device schedule, so
+their three-way check runs on the ndev=1 jax/numpy pair in-process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.tiling import from_tiles, random_spd, to_tiles
+
+NDEVS = [2, 4]
+POLICIES = ["sync", "v2", "v3"]
+
+
+def _run_sub(code: str, devices: int = 4):
+    env = {"XLA_FLAGS":
+           f"--xla_force_host_platform_device_count={devices}",
+           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+           "JAX_PLATFORMS": "cpu"}
+    env.update({k: v for k, v in os.environ.items()
+                if k not in env and k != "XLA_FLAGS"})
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=900,
+                          env=env, cwd=os.path.dirname(
+                              os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout
+
+
+_THREE_WAY = """
+    import numpy as np, jax
+    jax.config.update('jax_enable_x64', True)
+    import repro
+    from repro.core.analytics import HW, crosscheck_executed_volume
+    from repro.core.cholesky import run_multidevice_numpy
+    from repro.core.tiling import from_tiles, random_spd, to_tiles
+
+    n, tb, ndev, policy = {n}, {tb}, {ndev}, {policy!r}
+    a = random_spd(n, seed=23)
+    cfg = repro.CholeskyConfig(tb=tb, policy=policy, ndev=ndev,
+                               backend='jax')
+    assert cfg.resolved_backend() == 'jax'
+    solver = repro.plan(n, cfg).compile()
+    l_jax = solver.factor(a)
+
+    # 1) vs LAPACK
+    l_ref = np.linalg.cholesky(a)
+    assert np.abs(l_jax - l_ref).max() < 1e-10
+
+    # 2) vs the NumPy oracle replay of the *same* op streams (BLAS
+    #    round-off only: identical op order, identical rounding events)
+    l_np = np.tril(from_tiles(run_multidevice_numpy(to_tiles(a, tb),
+                                                    solver.schedule)))
+    assert np.abs(l_jax - l_np).max() < 1e-13
+
+    # 3) executed interconnect traffic == static schedule == simulator
+    cc = crosscheck_executed_volume(solver.schedule,
+                                    solver.transfer_stats(),
+                                    hw=HW['gh200'])
+    assert cc['match'], cc['mismatches']
+
+    # repeated factorization: no retrace, bitwise-identical replay
+    traces = solver.stats['jit_traces']
+    l2 = solver.factor(a)
+    assert solver.stats['jit_traces'] == traces
+    assert np.array_equal(l_jax, l2)
+    print('OK')
+"""
+
+
+@pytest.mark.parametrize("ndev", NDEVS)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_three_way_fp64(ndev, policy):
+    out = _run_sub(_THREE_WAY.format(n=128, tb=16, ndev=ndev,
+                                     policy=policy), devices=ndev)
+    assert "OK" in out
+
+
+@pytest.mark.parametrize("ndev", NDEVS)
+def test_three_way_mxp(ndev):
+    """MxP ladder: the jax executor performs the identical class-rounding
+    events as the NumPy replay, and both land within the plan's accuracy
+    level of LAPACK."""
+    out = _run_sub("""
+        import numpy as np, jax
+        jax.config.update('jax_enable_x64', True)
+        import repro
+        from repro.core.analytics import HW, crosscheck_executed_volume
+        from repro.core.cholesky import run_multidevice_numpy
+        from repro.core.tiling import from_tiles, random_spd, to_tiles
+
+        n, tb, ndev = 128, 16, %d
+        a = random_spd(n, seed=7)
+        cfg = repro.CholeskyConfig(tb=tb, policy='v3', ndev=ndev,
+                                   backend='jax', eps_target=1e-6)
+        solver = repro.plan(n, cfg.specialize(a)).compile()
+        msched = solver.schedule
+        assert msched.bcast_bytes() > 0
+        l_jax = solver.factor(a)
+        l_np = np.tril(from_tiles(run_multidevice_numpy(to_tiles(a, tb),
+                                                        msched)))
+        assert np.abs(l_jax - l_np).max() < 1e-8
+        assert np.abs(l_jax - np.linalg.cholesky(a)).max() < 1e-3
+        cc = crosscheck_executed_volume(msched, solver.transfer_stats(),
+                                        hw=HW['gh200'])
+        assert cc['match'], cc['mismatches']
+        # MxP shrinks the executed interconnect bytes below uniform f64
+        f64 = repro.build_multidevice_schedule(n // tb, tb, ndev, 'v3')
+        assert solver.transfer_stats()['recv_bytes'] < f64.bcast_bytes()
+        print('OK')
+    """ % ndev, devices=ndev)
+    assert "OK" in out
+
+
+def test_executor_vs_shard_map_reference():
+    """The static-schedule executor against the independently-derived
+    shard_map einsum baseline (`core/distributed.py`) — no shared code
+    beyond the tile layout."""
+    out = _run_sub("""
+        import numpy as np, jax
+        jax.config.update('jax_enable_x64', True)
+        import repro
+        from repro.core.distributed import distributed_cholesky
+        from repro.core.tiling import random_spd
+
+        n, tb, ndev = 128, 16, 4
+        a = random_spd(n, seed=31)
+        solver = repro.plan(n, repro.CholeskyConfig(
+            tb=tb, policy='v3', ndev=ndev, backend='jax')).compile()
+        l_exec = solver.factor(a)
+        mesh = jax.make_mesh((ndev,), ('model',))
+        l_ref = distributed_cholesky(a, tb, mesh)
+        assert np.abs(l_exec - l_ref).max() < 1e-11
+        print('OK')
+    """, devices=4)
+    assert "OK" in out
+
+
+def test_auto_backend_resolves_to_jax_with_devices():
+    """backend='auto' + ndev>1 runs the per-device jax executor whenever
+    the process sees enough devices (and the numpy replay otherwise —
+    asserted in-process by test_api.py)."""
+    out = _run_sub("""
+        import numpy as np, jax
+        jax.config.update('jax_enable_x64', True)
+        import repro
+        from repro.core.tiling import random_spd
+        cfg = repro.CholeskyConfig(tb=16, policy='v3', ndev=2)
+        assert cfg.resolved_backend() == 'jax'
+        solver = repro.plan(64, cfg).compile()
+        a = random_spd(64, seed=1)
+        l = solver.factor(a)
+        assert np.abs(l - np.linalg.cholesky(a)).max() < 1e-10
+        assert solver.transfer_stats() is not None   # jax executor ran
+        print('OK')
+    """, devices=2)
+    assert "OK" in out
+
+
+def test_solver_surface_on_multidevice_jax_factor():
+    """OOCSolver.solve/solve_lower/logdet work unchanged on top of the
+    multi-device jax factor (acceptance: factor/solve/logdet on 4
+    host-platform devices)."""
+    out = _run_sub("""
+        import numpy as np, jax
+        jax.config.update('jax_enable_x64', True)
+        import scipy.linalg as sla
+        import repro
+        from repro.core.tiling import random_spd
+        n = 128
+        a = random_spd(n, seed=5)
+        solver = repro.plan(n, repro.CholeskyConfig(
+            tb=16, policy='v3', ndev=4, backend='jax')).compile()
+        assert solver.factor(a, materialize=False) is None
+        b = np.linspace(0, 1, n)
+        ref = np.linalg.cholesky(a)
+        assert np.abs(solver.solve(b)
+                      - sla.cho_solve((ref, True), b)).max() < 1e-10
+        assert np.abs(solver.solve_lower(b)
+                      - sla.solve_triangular(ref, b, lower=True)).max() < 1e-10
+        assert abs(solver.logdet()
+                   - 2 * np.log(np.diag(ref)).sum()) < 1e-9
+        print('OK')
+    """, devices=4)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Policies without a multi-device schedule: three-way check at ndev=1
+# (jax unrolled jit == numpy oracle == LAPACK), in-process.
+
+@pytest.mark.parametrize("policy", ["async", "v4"])
+def test_single_device_three_way(policy):
+    n, tb = 96, 16
+    a = random_spd(n, seed=17)
+    l_jax = repro.plan(n, tb=tb, policy=policy,
+                       backend="jax").compile().factor(a)
+    l_np = repro.plan(n, tb=tb, policy=policy,
+                      backend="numpy").compile().factor(a)
+    ref = np.linalg.cholesky(a)
+    assert np.abs(l_jax - ref).max() < 1e-11
+    assert np.abs(l_jax - l_np).max() < 1e-13

@@ -21,8 +21,14 @@ from repro.core.precision import assign_precision
 from repro.core.schedule import build_multidevice_schedule, build_schedule
 
 NT, TB, SLOTS = 6, 8, 6
+NT4 = 8     # ndev=4 digests: at NT=6 each device owns <= 2 rows and the
+            # v2/v3 streams coincide (diag pinning never changes an
+            # eviction); NT=8 keeps every policy pair distinct
 EPS = 1e-6
 
+# ndev>1 digests additionally pin the executor-facing metadata the
+# multi-device JAX executor addresses buffers with (panel_base + per-stream
+# slot counts) — regenerated in PR 3 when that metadata entered the hash.
 GOLDEN = {
     "sync": "18f72df696a87392",
     "async": "e589eebb10449aa5",
@@ -30,22 +36,26 @@ GOLDEN = {
     "v2": "78e4bdcc2dc43d53",
     "v3": "eac166216f3ca7a7",
     "v4": "381724b6f78120e0",
-    "sync@ndev2": "086ddeee1fe5c3f2",
-    "v1@ndev2": "69cb29ec7356fbb8",
-    "v2@ndev2": "677d5bf70b1827a2",
-    "v3@ndev2": "8891cd4af2103ddc",
+    "sync@ndev2": "c140c5a8a8228b4d",
+    "v1@ndev2": "924deedacb3e7556",
+    "v2@ndev2": "ff2b7c774be8455c",
+    "v3@ndev2": "45e52e2feb022562",
+    "sync@ndev4": "058243eb0ae9e1dc",
+    "v1@ndev4": "50207d901c572dba",
+    "v2@ndev4": "e99e475ca799fb14",
+    "v3@ndev4": "d85c9d7501a73d7b",
 }
 
 
-def _fixed_plan():
+def _fixed_plan(nt=NT):
     """Deterministic MxP plan built from pure arithmetic (no RNG): mixed
     classes exercise the per-tile byte accounting in the digests."""
     norms = np.fromfunction(
-        lambda i, j: 0.25 + ((3 * i + 5 * j) % 7) / 7.0, (NT, NT))
+        lambda i, j: 0.25 + ((3 * i + 5 * j) % 7) / 7.0, (nt, nt))
     dist = np.fromfunction(
-        lambda i, j: np.minimum(abs(i - j), 4.0), (NT, NT))
+        lambda i, j: np.minimum(abs(i - j), 4.0), (nt, nt))
     norms = norms * (1e-2 ** dist)
-    norms[np.diag_indices(NT)] = 10.0
+    norms[np.diag_indices(nt)] = 10.0
     return assign_precision(norms, float(np.sqrt((norms ** 2).sum())), EPS)
 
 
@@ -60,6 +70,10 @@ def _digests():
     for p in ("sync", "v1", "v2", "v3"):
         out[p + "@ndev2"] = build_multidevice_schedule(
             NT, TB, 2, p, cache_slots=SLOTS, plan=plan).digest()
+    plan4 = _fixed_plan(NT4)
+    for p in ("sync", "v1", "v2", "v3"):
+        out[p + "@ndev4"] = build_multidevice_schedule(
+            NT4, TB, 4, p, cache_slots=SLOTS, plan=plan4).digest()
     return out
 
 
@@ -95,3 +109,28 @@ def test_digest_stable_across_builds():
     a = build_schedule(NT, TB, "v3", cache_slots=SLOTS, plan=plan)
     b = build_schedule(NT, TB, "v3", cache_slots=SLOTS, plan=plan)
     assert a.digest() == b.digest()
+    ma = build_multidevice_schedule(NT, TB, 4, "v3", cache_slots=SLOTS,
+                                    plan=plan)
+    mb = build_multidevice_schedule(NT, TB, 4, "v3", cache_slots=SLOTS,
+                                    plan=plan)
+    assert ma.digest() == mb.digest()
+
+
+def test_digest_pins_executor_metadata():
+    """The ndev>1 digest covers the slot/panel metadata the JAX executor
+    addresses device buffers with: identical op streams with a different
+    panel region must not hash equal."""
+    import dataclasses
+    plan = _fixed_plan()
+    m = build_multidevice_schedule(NT, TB, 2, "v3", cache_slots=SLOTS,
+                                   plan=plan)
+    assert m.panel_base == SLOTS
+    assert m.stream_nslots(0) >= m.panel_base
+    moved = dataclasses.replace(m, panel_base=m.panel_base + 1)
+    assert moved.digest() != m.digest()
+    # the ndev=1 degenerate keeps the op-only hash (from_single round-trip)
+    s = build_schedule(NT, TB, "v3", cache_slots=SLOTS, plan=plan)
+    m1 = build_multidevice_schedule(NT, TB, 1, "v3", cache_slots=SLOTS,
+                                    plan=plan)
+    assert m1.panel_base == -1
+    assert m1.digest() == type(m1).from_single(s).digest()

@@ -1,0 +1,157 @@
+"""Blocked triangular substitution (`core/solve.py`) through the solver API.
+
+Property sweeps (hypothesis when installed, fixed-seed fallback via
+``_hypothesis_compat``) over the dimensions that shape the tile loops:
+tile count, right-hand-side width, policy, and precision ladder; plus the
+edge cases the sweeps cannot reach — ``tb`` not dividing ``n`` (rejected
+eagerly), ``materialize=False`` (the OOC mode: the dense factor is never
+assembled), and MxP factors feeding the f64 substitution.
+"""
+import numpy as np
+import pytest
+import scipy.linalg as sla
+
+from _hypothesis_compat import given, settings, st
+
+import repro
+from repro.core.solve import (cho_solve_tiles, logdet_tiles,
+                              solve_lower_t_tiles, solve_lower_tiles)
+from repro.core.tiling import random_spd, to_tiles
+
+
+def _solver(n, tb, policy="v3", **kw):
+    return repro.plan(n, tb=tb, policy=policy, **kw).compile()
+
+
+# ---------------------------------------------------------------------------
+# Property sweeps (hypothesis or fixed-seed fallback)
+
+@settings(max_examples=10, deadline=None)
+@given(nt=st.integers(min_value=1, max_value=6),
+       tb=st.sampled_from([8, 16, 24]),
+       nrhs=st.integers(min_value=0, max_value=3),
+       policy=st.sampled_from(["sync", "v1", "v3", "v4"]))
+def test_solve_matches_scipy(nt, tb, nrhs, policy):
+    """solve() == scipy cho_solve for every tiling/policy/rhs shape
+    (nrhs=0 means a 1-D right-hand side)."""
+    n = nt * tb
+    a = random_spd(n, seed=nt * 131 + tb)
+    rng = np.random.default_rng(nt * 7 + nrhs)
+    b = rng.standard_normal(n if nrhs == 0 else (n, nrhs))
+    s = _solver(n, tb, policy, backend="numpy")
+    s.factor(a)
+    x = s.solve(b)
+    assert x.shape == b.shape
+    ref = sla.cho_solve((np.linalg.cholesky(a), True), b)
+    assert np.abs(x - ref).max() < 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(nt=st.integers(min_value=1, max_value=5),
+       tb=st.sampled_from([8, 16]),
+       seed=st.integers(min_value=0, max_value=99))
+def test_solve_lower_and_transpose_roundtrip(nt, tb, seed):
+    """L z = b then L^T x = z reconstructs cho_solve; each half matches
+    dense triangular solves on the materialized factor."""
+    n = nt * tb
+    a = random_spd(n, seed=seed)
+    s = _solver(n, tb, backend="numpy")
+    l = s.factor(a)
+    b = np.random.default_rng(seed).standard_normal(n)
+    z = s.solve_lower(b)
+    assert np.abs(z - sla.solve_triangular(l, b, lower=True)).max() < 1e-9
+    tiles = to_tiles(np.tril(l), tb)
+    x = solve_lower_t_tiles(tiles, z)
+    assert np.abs(x - s.solve(b)).max() < 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(nt=st.integers(min_value=1, max_value=5),
+       seed=st.integers(min_value=0, max_value=99))
+def test_logdet_matches_slogdet(nt, seed):
+    n = nt * 16
+    a = random_spd(n, seed=seed)
+    s = _solver(n, 16, backend="numpy")
+    s.factor(a)
+    sign, ref = np.linalg.slogdet(a)
+    assert sign > 0
+    assert s.logdet() == pytest.approx(ref, rel=1e-10)
+
+
+@settings(max_examples=6, deadline=None)
+@given(ladder=st.sampled_from(["tpu", "gpu"]),
+       eps=st.sampled_from([1e-6, 1e-8]),
+       policy=st.sampled_from(["v1", "v3"]))
+def test_solve_on_mxp_factor_tracks_eps(ladder, eps, policy):
+    """An MxP factor still solves: the residual follows the plan's
+    accuracy level, not fp64 round-off."""
+    n, tb = 96, 16
+    a = random_spd(n, seed=3)
+    cfg = repro.CholeskyConfig(tb=tb, policy=policy, eps_target=eps,
+                               ladder=ladder, backend="numpy")
+    s = repro.plan(n, cfg.specialize(a)).compile()
+    s.factor(a)
+    b = np.ones(n)
+    x = s.solve(b)
+    assert np.abs(a @ x - b).max() < max(1e3 * eps, 1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Edge cases the sweeps cannot reach
+
+@pytest.mark.parametrize("n, tb", [(100, 16), (64, 48), (17, 2)])
+def test_tb_not_dividing_n_rejected_eagerly(n, tb):
+    """Planning (not factoring) rejects a tiling that does not cover the
+    matrix — the error arrives before any schedule is built."""
+    with pytest.raises(ValueError, match="multiple"):
+        repro.plan(n, tb=tb, policy="v3")
+
+
+def test_materialize_false_never_forms_dense_factor():
+    """materialize=False is the OOC mode: factor() returns None, the tile
+    store feeds solve/solve_lower/logdet, and results equal the
+    materialized path bit for bit (same replay, same tiles)."""
+    n, tb = 96, 32
+    a = random_spd(n, seed=12)
+    s1 = _solver(n, tb)
+    s2 = _solver(n, tb)
+    l = s1.factor(a, materialize=True)
+    assert s2.factor(a, materialize=False) is None
+    b = np.arange(n, dtype=np.float64) / n
+    assert np.array_equal(s1.solve(b), s2.solve(b))
+    assert np.array_equal(s1.solve_lower(b), s2.solve_lower(b))
+    assert s1.logdet() == s2.logdet()
+    assert np.abs(s2.logdet()
+                  - 2 * np.sum(np.log(np.diag(np.linalg.cholesky(a))))) < 1e-9
+    del l
+
+
+def test_solve_shape_validation():
+    n, tb = 64, 16
+    a = random_spd(n, seed=0)
+    s = _solver(n, tb)
+    s.factor(a)
+    with pytest.raises(ValueError, match="rows"):
+        s.solve(np.ones(n + 1))
+    with pytest.raises(ValueError, match="malformed"):
+        cho_solve_tiles(np.zeros((2, 3, tb, tb)), np.ones(n))
+
+
+def test_solve_functions_on_raw_tile_store():
+    """The module-level tile routines accept any factored store — the
+    executors' output contract (strictly-upper tiles never read)."""
+    n, tb = 80, 16
+    a = random_spd(n, seed=4)
+    ref = np.linalg.cholesky(a)
+    tiles = to_tiles(ref, tb)
+    # poison the strictly-upper tiles: solves must never read them
+    nt = n // tb
+    for i in range(nt):
+        for j in range(i + 1, nt):
+            tiles[i, j] = np.nan
+    b = np.linspace(-1, 1, n)
+    z = solve_lower_tiles(tiles, b)
+    assert np.abs(z - sla.solve_triangular(ref, b, lower=True)).max() < 1e-10
+    x = cho_solve_tiles(tiles, b)
+    assert np.abs(x - sla.cho_solve((ref, True), b)).max() < 1e-9
+    assert np.isfinite(logdet_tiles(tiles))
