@@ -1,0 +1,75 @@
+"""Tuner trajectory: autotuned schedule vs the hand-picked default on
+every hardware preset, at a genuinely out-of-core size per machine.
+
+For each preset the matrix is sized to overflow ``mem_bytes`` (the OOC
+regime where the memory cap forces real policy/cache selection), the
+search ranks every feasible ``(tb, policy, cache_slots)``, and the
+winner is compared against :func:`repro.tune.default_config` — the V3 /
+nt~32 / builder-default-slots configuration the benchmarks used before
+the tuner existed.  The emitted speedup column is the number later perf
+PRs (segment fusion, eager broadcast, 2D ownership) move.
+
+A calibrated measured model of the CI host is exercised too (tiny tb so
+it stays fast): same search path, ``source="measured"``.
+"""
+import repro
+from repro import tune
+from repro.core.analytics import HW
+
+
+def _ooc_n(mem_bytes: float) -> int:
+    """Smallest power-of-two-ish n whose f64 matrix is ~2x device memory
+    (power of two keeps the divisor grid rich for the tb search)."""
+    n = 1 << 12
+    while 8 * n * n < 2 * mem_bytes:
+        n <<= 1
+    return n
+
+
+def run(out):
+    out("== tune: autotuned schedule vs hand-picked default (OOC sizes) ==")
+    rows = []
+    for name, hw in HW.items():
+        n = _ooc_n(hw.mem_bytes)
+        result = tune.tune(n, hw=hw, use_db=False)
+        dflt = tune.default_config(n)
+        d = tune.score_config(n, dflt, hw)   # as the builders would run it
+        b = result.best
+        speedup = d.makespan / b.makespan
+        rows.append({
+            "hw": name, "n": n, "matrix_gb": 8 * n * n / 1e9,
+            "mem_gb": hw.mem_bytes / 1e9,
+            "tuned": b.row(), "default": d.row(),
+            "speedup_vs_default": speedup,
+        })
+        c = b.config
+        out(f"[{name:9s}] n={n} ({8*n*n/1e9:.0f} GB vs {hw.mem_bytes/1e9:.0f}"
+            f" GB device): tuned tb={c.tb} {c.policy} slots={c.cache_slots}"
+            f" -> {b.makespan:.2f}s ({b.tflops:.1f} TF/s)   default"
+            f" tb={dflt.tb} v3 -> {d.makespan:.2f}s   speedup {speedup:.3f}x")
+        assert b.makespan <= d.makespan * (1 + 1e-9), \
+            f"tuned config slower than default on {name}"
+        assert tune.is_feasible(n, c, hw)
+
+    # the calibrated path: measured model of this host drives the same
+    # search (CPU CI smoke — tiny tb keeps the micro-benchmarks fast)
+    model = tune.calibrate(tb=64, repeats=1, transfer_sizes_mb=(1, 4))
+    n = _ooc_n(model.mem_bytes)
+    result = tune.tune(n, hw=model, use_db=False)
+    b = result.best
+    out(f"[measured ] {model.name} (fp={model.fingerprint}, "
+        f"{model.mem_bytes/1e9:.0f} GB): n={n} tuned tb={b.config.tb} "
+        f"{b.config.policy} slots={b.config.cache_slots} -> "
+        f"{b.makespan:.2f}s")
+    out("")
+    return {
+        "presets": rows,
+        "measured": {
+            "hw_name": model.name,
+            "fingerprint": model.fingerprint,
+            "source": model.source,
+            "mem_gb": model.mem_bytes / 1e9,
+            "n": n,
+            "tuned": b.row(),
+        },
+    }

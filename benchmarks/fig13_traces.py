@@ -1,10 +1,20 @@
 """Fig. 7/13: engine traces — overlap quality across policies and
-correlation levels (100k-class matrix, GH200 model)."""
+correlation levels (100k-class matrix, GH200 model).
+
+Each simulated timeline is printed as an ASCII trace and exported as
+chrome://tracing JSON (``benchmarks/out/fig13_<label>.trace.json``; open
+at chrome://tracing or https://ui.perfetto.dev) — one track per engine,
+one complete event per op span.
+"""
+import pathlib
+
 import numpy as np
 
 import repro
-from repro.core.analytics import HW, ascii_trace
+from repro.core.analytics import HW, ascii_trace, chrome_trace
 from repro.core.precision import assign_precision
+
+OUT_DIR = pathlib.Path(__file__).resolve().parent / "out"
 
 
 def _plan(nt, decay, eps=1e-5, seed=0):
@@ -17,17 +27,30 @@ def _plan(nt, decay, eps=1e-5, seed=0):
     return assign_precision(norms, float(np.sqrt((norms ** 2).sum())), eps)
 
 
+def _export(label, r, out):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"fig13_{label}.trace.json"
+    chrome_trace(r, path)
+    out(f"   chrome trace -> {path}")
+
+
 def run(out):
     out("== Fig. 7/13: engine traces (o=C2G  #=compute  g=G2C) ==")
     nt, tb = 24, 1024
     n = nt * tb
     hw = HW["gh200"]
+    data = {"n": n, "tb": tb, "hw": "gh200", "policies": {}}
     out(f"[Fig. 7] {n}x{n} FP64, GH200:")
     for policy in ("sync", "v3"):
         r = repro.plan(n, tb=tb, policy=policy).simulate(
             hw, record_timeline=True)
         out(f"-- {policy} ({r.makespan*1e3:.0f} ms) --")
         out(ascii_trace(r))
+        _export(policy, r, out)
+        data["policies"][policy] = {"makespan_s": r.makespan,
+                                    "tflops": r.tflops,
+                                    "h2d_bytes": r.h2d_bytes,
+                                    "d2h_bytes": r.d2h_bytes}
     out(f"[Fig. 13] V3 MxP at three correlation levels (eps=1e-5):")
     for name, decay in (("weak", 1e-3), ("medium", 1e-2), ("strong", 2e-1)):
         pl = repro.plan(n, repro.CholeskyConfig(tb=tb, policy="v3",
@@ -36,6 +59,9 @@ def run(out):
         out(f"-- {name} ({r.makespan*1e3:.0f} ms, "
             f"{ {k: v for k, v in pl.schedule.plan.histogram().items() if v} }) --")
         out(ascii_trace(r))
+        _export(f"mxp_{name}", r, out)
+        data["policies"][f"mxp_{name}"] = {"makespan_s": r.makespan,
+                                           "tflops": r.tflops}
     # the paper's takeaway: compute time shrinks with weaker correlation
     t = {}
     for name, decay in (("weak", 1e-3), ("strong", 2e-1)):
@@ -43,3 +69,4 @@ def run(out):
         t[name] = repro.plan(n, cfg).simulate(hw).compute_busy
     assert t["weak"] < t["strong"]
     out("")
+    return data

@@ -39,6 +39,9 @@ def run(out):
     t_xla = time.time() - t0
     out(f"[measured n={n}] LAPACK {flops/t_lapack/1e9:6.2f} GFlop/s   "
         f"XLA in-core {flops/t_xla/1e9:6.2f} GFlop/s")
+    data = {"measured_n": n, "measured_gflops": {
+        "lapack": flops / t_lapack / 1e9, "xla_incore": flops / t_xla / 1e9},
+        "modeled_tflops": {}}
     for p in POLICIES:
         solver = repro.plan(n, tb=tb, policy=p).compile()
         solver.factor(a)                 # warm: builds schedule + jits once
@@ -46,6 +49,7 @@ def run(out):
         l = solver.factor(a)             # replay of the compiled executor
         dt = time.time() - t0
         err = np.abs(l - ref).max()
+        data["measured_gflops"][p] = flops / dt / 1e9
         out(f"[measured n={n}] {p:6s} {flops/dt/1e9:6.2f} GFlop/s "
             f"(err {err:.1e})")
 
@@ -66,7 +70,11 @@ def run(out):
         out(f"[modeled {hw_name}] matrix-size sweep (80GB window), TFlop/s:")
         hdr = "   n\\policy " + "".join(f"{p:>9s}" for p in POLICIES)
         out(hdr)
+        data["modeled_tflops"][hw_name] = {}
         for nt in sizes:
             vals = [plans[(nt, p)].simulate(hw).tflops for p in POLICIES]
+            data["modeled_tflops"][hw_name][nt * tb_m] = dict(
+                zip(POLICIES, vals))
             out(f"   {nt*tb_m:7d}  " + "".join(f"{v:9.1f}" for v in vals))
     out("")
+    return data

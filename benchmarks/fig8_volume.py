@@ -13,15 +13,20 @@ POLICIES = ["sync", "async", "v1", "v2", "v3"]
 def run(out):
     out("== Fig. 8: data-movement volume (exact, from the schedule) ==")
     tb = 512
+    data = {}
     for nt in (16, 32):
         n = nt * tb
         out(f"matrix {n}x{n} (f64 {8*n*n/1e9:.1f} GB), tile {tb}:")
         out(f"  {'policy':8s} {'C2G GB':>9s} {'G2C GB':>9s} "
             f"{'total GB':>9s} {'loads':>7s} {'hits':>6s}")
         vols = {}
+        data[n] = {}
         for p in POLICIES:
             r = repro.plan(n, tb=tb, policy=p).volume()
             vols[p] = r["c2g_bytes"]
+            data[n][p] = {k: r[k] for k in
+                          ("c2g_bytes", "g2c_bytes", "total_bytes",
+                           "loads", "cache_hits")}
             out(f"  {p:8s} {r['c2g_bytes']/1e9:9.2f} "
                 f"{r['g2c_bytes']/1e9:9.2f} {r['total_bytes']/1e9:9.2f} "
                 f"{r['loads']:7d} {r['cache_hits']:6d}")
@@ -31,3 +36,4 @@ def run(out):
         assert vols["v3"] <= vols["v2"] <= vols["v1"] < vols["async"]
         out(f"  async/V3 volume ratio: {vols['async']/vols['v3']:.2f}x")
     out("")
+    return {"tb": tb, "volumes_by_n": data}

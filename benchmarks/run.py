@@ -1,13 +1,24 @@
-"""Benchmark harness: one module per paper figure/table.
+"""Canonical benchmark runner: one module per paper figure/table, plus the
+tuner trajectory — every run also emits machine-readable JSON so the perf
+history is recorded across PRs.
 
   PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run fig6 fig10 # subset
+  PYTHONPATH=src python -m benchmarks.run fig6 tune  # subset
+
+Each bench module's ``run(out)`` may return a JSON-serializable dict of
+its headline numbers (makespans, tflops, byte volumes, tuned-vs-default
+ratios).  The runner writes one ``out/BENCH_<name>.json`` per bench —
+``{"bench", "ok", "seconds", "repro_version", "data"}`` — and an
+aggregate ``out/BENCH_summary.json``; diffing those files between
+commits is the perf trajectory.
 """
+import json
+import pathlib
 import sys
 import time
 
-from . import (fig6_versions, fig8_volume, fig9_multidev, fig10_kl,
-               fig11_mxp_perf, fig12_mxp_volume, fig13_traces,
+from . import (bench_tune, fig6_versions, fig8_volume, fig9_multidev,
+               fig10_kl, fig11_mxp_perf, fig12_mxp_volume, fig13_traces,
                perf_cholesky, roofline)
 
 BENCHES = {
@@ -20,21 +31,48 @@ BENCHES = {
     "fig13": fig13_traces,
     "perf_cholesky": perf_cholesky,
     "roofline": roofline,
+    "tune": bench_tune,
 }
+
+OUT_DIR = pathlib.Path(__file__).resolve().parent / "out"
+
+
+def _write(name: str, record: dict) -> pathlib.Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True, default=str)
+    return path
 
 
 def main():
+    import repro
     names = sys.argv[1:] or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        sys.exit(f"unknown bench(es) {unknown}; expected {list(BENCHES)}")
     failures = []
+    summary = {}
     for name in names:
         mod = BENCHES[name]
         t0 = time.time()
+        record = {"bench": name, "repro_version": repro.__version__}
         try:
-            mod.run(print)
-            print(f"[{name}] OK in {time.time()-t0:.1f}s\n", flush=True)
+            record["data"] = mod.run(print)
+            record["ok"] = True
+            print(f"[{name}] OK in {time.time()-t0:.1f}s", flush=True)
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))
-            print(f"[{name}] FAILED: {e}\n", flush=True)
+            record["ok"] = False
+            record["error"] = f"{type(e).__name__}: {e}"
+            print(f"[{name}] FAILED: {e}", flush=True)
+        record["seconds"] = round(time.time() - t0, 3)
+        path = _write(name, record)
+        summary[name] = {k: record[k] for k in ("ok", "seconds")}
+        print(f"[{name}] wrote {path}\n", flush=True)
+    _write("summary", {"bench": "summary",
+                       "repro_version": repro.__version__,
+                       "benches": summary})
     if failures:
         sys.exit(1)
     print(f"== all {len(names)} benchmarks passed ==")

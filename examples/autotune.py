@@ -1,0 +1,80 @@
+"""Autotune: let the cost model pick tb / policy / cache_slots for you.
+
+Three levels of engagement, lowest-effort first:
+
+  1. open config   — ``CholeskyConfig(tb=0, policy="auto")``: plan()
+     resolves the open axes by exact-simulation search before building
+     the schedule (datasheet preset model; deterministic, no device work).
+  2. explicit campaign — ``tune.tune(n, hw=...)`` returns the full ranked
+     candidate table, not just the winner.
+  3. calibrated    — ``tune.calibrate()`` micro-benchmarks THIS machine
+     (kernel rates per precision class, link bandwidth, overheads,
+     device memory) and the same search runs on measured numbers.
+
+Winners are memoized by hardware fingerprint; set the ``REPRO_TUNE_DB``
+environment variable to persist them across processes.
+"""
+import numpy as np
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import repro
+from repro import tune
+
+
+def main():
+    n = 2048
+
+    # -- 1) fully automatic: open dimensions resolve inside plan() --------
+    cfg = repro.CholeskyConfig(tb=0, policy="auto", hw="gh200")
+    solver = repro.plan(n, cfg).compile()
+    c = solver.config
+    print(f"auto-resolved for gh200:  tb={c.tb}  policy={c.policy}  "
+          f"cache_slots={c.cache_slots}")
+    a = repro.random_spd(n, seed=0)
+    l = solver.factor(a)
+    print(f"factor through tuned plan: max|L-chol(A)| = "
+          f"{np.abs(l - np.linalg.cholesky(a)).max():.2e}")
+
+    # -- 2) explicit campaign: the ranked candidate table ------------------
+    result = tune.tune(n, hw="a100-pcie", use_db=False)
+    print(f"\ntop candidates on a100-pcie (of {len(result.candidates)}):")
+    print(f"  {'tb':>6s} {'policy':>7s} {'slots':>6s} {'makespan':>10s} "
+          f"{'TF/s':>6s} {'moved GB':>9s}")
+    for cand in result.candidates[:5]:
+        r = cand.row()
+        print(f"  {r['tb']:6d} {r['policy']:>7s} {r['cache_slots']:6d} "
+              f"{r['makespan_s']:9.4f}s {r['tflops']:6.1f} "
+              f"{(r['loads_bytes'] + r['stores_bytes'])/1e9:9.2f}")
+    dflt = tune.score_config(n, tune.default_config(n), HW_A100)
+    print(f"  hand-picked default: tb={tune.default_config(n).tb} v3 "
+          f"-> {dflt.makespan:.4f}s "
+          f"({dflt.makespan / result.best.makespan:.2f}x the winner)")
+
+    # -- 3) calibrate this machine and tune against the measurement --------
+    model = tune.calibrate(tb=128, repeats=1, transfer_sizes_mb=(1, 4))
+    print(f"\nmeasured model: {model.name}  (fingerprint {model.fingerprint})")
+    print(f"  f64 GEMM  {model.kernel_flops['gemm']['f64']/1e9:8.1f} GFlop/s"
+          f"   bf16 GEMM {model.kernel_flops['gemm']['bf16']/1e9:8.1f}")
+    print(f"  h2d {model.h2d_bw/1e9:.1f} GB/s   d2h {model.d2h_bw/1e9:.1f}"
+          f" GB/s   mem {model.mem_bytes/1e9:.1f} GB   "
+          f"launch {model.launch_overhead*1e6:.1f} us")
+    measured = tune.tune(n, hw=model, use_db=False)
+    mc = measured.config
+    print(f"tuned for THIS machine:   tb={mc.tb}  policy={mc.policy}  "
+          f"cache_slots={mc.cache_slots}  "
+          f"(predicted {measured.best.makespan:.3f}s)")
+
+    # install the measurement as the process default: every auto config
+    # from here on resolves against the real machine
+    tune.set_default_hardware(model)
+    resolved = tune.resolve_config(n, repro.CholeskyConfig(
+        tb=0, policy="auto"))
+    assert resolved == mc
+
+
+HW_A100 = repro.HW["a100-pcie"]
+
+if __name__ == "__main__":
+    main()

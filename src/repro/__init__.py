@@ -16,10 +16,15 @@ Public surface — the two-phase planner/executor API::
     v = solver.volume()                     # exact byte-volume report
 
 The one-shot :func:`ooc_cholesky` remains as a deprecated shim.
+
+Autotuning (0.4): leave dimensions open and the planner resolves them —
+``repro.plan(n, CholeskyConfig(tb=0, policy="auto", hw="gh200"))`` picks
+tile size, policy, and cache budget by exact-simulation search; see
+:mod:`repro.tune` for hardware calibration and explicit campaigns.
 """
 from repro.core.analytics import (HW, HardwareModel, ascii_trace,
-                                  crosscheck_executed_volume, simulate,
-                                  simulate_multi, volume_report,
+                                  chrome_trace, crosscheck_executed_volume,
+                                  simulate, simulate_multi, volume_report,
                                   volume_report_multi)
 from repro.core.api import (CholeskyConfig, CholeskyPlan, OOCSolver,
                             clear_plan_cache, plan)
@@ -31,8 +36,9 @@ from repro.core.precision import (LADDERS, PrecisionPlan, assign_precision,
 from repro.core.schedule import (MultiDeviceSchedule, Op, OpKind, Schedule,
                                  build_multidevice_schedule, build_schedule)
 from repro.core.tiling import TileLayout, from_tiles, random_spd, to_tiles
+from repro import tune
 
-__version__ = "0.3.0"
+__version__ = "0.4.0"
 
 __all__ = [
     "__version__",
@@ -48,8 +54,10 @@ __all__ = [
     "build_schedule", "build_multidevice_schedule",
     # analytics
     "HardwareModel", "HW", "simulate", "simulate_multi",
-    "volume_report", "volume_report_multi", "ascii_trace",
+    "volume_report", "volume_report_multi", "ascii_trace", "chrome_trace",
     "crosscheck_executed_volume",
+    # autotuner
+    "tune",
     # tiling
     "TileLayout", "to_tiles", "from_tiles", "random_spd",
 ]

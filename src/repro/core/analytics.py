@@ -15,8 +15,10 @@ panel-row broadcast (BCAST/RECV pairs) rides one *shared* interconnect
 engine whose bandwidth defaults to the preset's link speed — this is what
 separates the PCIe-switch platforms from NVLink-C2C in Fig. 9.
 
-Hardware presets carry published peak numbers; they parameterize the model
-only — nothing here measures real hardware (this repo targets TPU; CPU CI).
+Hardware presets carry published peak numbers (``source="datasheet"``);
+:func:`repro.tune.calibrate` produces *measured* models from live-backend
+micro-benchmarks (``source="measured"``, per-kernel rates, device-memory
+capacity, hardware fingerprint) that drive the same simulators.
 """
 from __future__ import annotations
 
@@ -37,34 +39,60 @@ class HardwareModel:
     d2h_bw: float
     alloc_overhead: float  # seconds per malloc/free pair (async policy)
     launch_overhead: float = 3e-6
+    mem_bytes: float = 0.0   # device memory capacity (0 = unknown/unbounded)
+    source: str = "datasheet"            # "datasheet" | "measured"
+    fingerprint: str = ""    # hardware identity hash (tuning-db cache key)
+    # optional per-kernel rates, FLOP/s: {"gemm": {"f64": r, ...}, ...}.
+    # Measured models fill this from micro-benchmarks (repro.tune.calibrate);
+    # datasheet presets leave it None and every task runs at the class peak.
+    kernel_flops: dict | None = None
+
+    def task_rate(self, task: str, cls_name: str) -> float:
+        """FLOP/s for one task kind (``"gemm"``/``"syrk"``/...) at one
+        precision class; falls back to the per-class peak when no
+        per-kernel measurement is recorded."""
+        if self.kernel_flops:
+            per_cls = self.kernel_flops.get(task)
+            if per_cls and cls_name in per_cls:
+                return per_cls[cls_name]
+        return self.flops[cls_name]
+
+    def max_cache_slots(self, tb: int, reserve_slots: int = 0) -> int:
+        """Largest cache-slot budget that fits ``mem_bytes`` for tb x tb
+        f64 device tiles, after reserving ``reserve_slots`` (panel region,
+        ndev > 1).  Unbounded when ``mem_bytes`` is unknown (0)."""
+        if self.mem_bytes <= 0:
+            return 2**31 - 1
+        return int(self.mem_bytes // (8 * tb * tb)) - reserve_slots
 
 
 HW = {
-    # PCIe Gen4 x16 ~ 25 GB/s effective; A100 fp64 tensor 19.5 TF.
+    # PCIe Gen4 x16 ~ 25 GB/s effective; A100 fp64 tensor 19.5 TF; 80 GB HBM.
     "a100-pcie": HardwareModel(
         "a100-pcie",
         {"f64": 19.5 * TFLOP, "f32": 19.5 * TFLOP, "f16": 312 * TFLOP,
          "bf16": 312 * TFLOP, "f8e4m3": 312 * TFLOP},
-        25 * GB, 25 * GB, 12e-6),
-    # PCIe Gen5 x16 ~ 50 GB/s effective; H100 fp64 tensor ~60 TF (free clocks).
+        25 * GB, 25 * GB, 12e-6, mem_bytes=80 * GB),
+    # PCIe Gen5 x16 ~ 50 GB/s effective; H100 fp64 tensor ~60 TF (free
+    # clocks); 80 GB HBM3.
     "h100-pcie": HardwareModel(
         "h100-pcie",
         {"f64": 60 * TFLOP, "f32": 60 * TFLOP, "f16": 750 * TFLOP,
          "bf16": 750 * TFLOP, "f8e4m3": 1500 * TFLOP},
-        50 * GB, 50 * GB, 12e-6),
-    # NVLink-C2C: 900 GB/s bidirectional -> 450 GB/s per direction.
+        50 * GB, 50 * GB, 12e-6, mem_bytes=80 * GB),
+    # NVLink-C2C: 900 GB/s bidirectional -> 450 GB/s per direction; 96 GB.
     "gh200": HardwareModel(
         "gh200",
         {"f64": 62 * TFLOP, "f32": 62 * TFLOP, "f16": 990 * TFLOP,
          "bf16": 990 * TFLOP, "f8e4m3": 1980 * TFLOP},
-        450 * GB, 450 * GB, 12e-6),
+        450 * GB, 450 * GB, 12e-6, mem_bytes=96 * GB),
     # TPU v5e: bf16 MXU 197 TF, fp8 394 TF; f32 via 3-pass ~ 1/4 rate;
-    # f64 emulated ~ 1/32 bf16.  Host DMA over PCIe ~ 32 GB/s.
+    # f64 emulated ~ 1/32 bf16.  Host DMA over PCIe ~ 32 GB/s; 16 GB HBM2.
     "tpu-v5e": HardwareModel(
         "tpu-v5e",
         {"f64": 6.2 * TFLOP, "f32": 49 * TFLOP, "f16": 197 * TFLOP,
          "bf16": 197 * TFLOP, "f8e4m3": 394 * TFLOP},
-        32 * GB, 32 * GB, 0.0),
+        32 * GB, 32 * GB, 0.0, mem_bytes=16 * GB),
 }
 
 _TASK_FLOPS = {
@@ -164,7 +192,7 @@ def simulate(sched: Schedule, hw: HardwareModel, record_timeline: bool = False) 
             reads[op.slot_c] = max(reads[op.slot_c], end)
         else:  # compute
             flops = _TASK_FLOPS[op.kind](tb)
-            rate = hw.flops[lad[op.cls]]
+            rate = hw.task_rate(op.kind.value, lad[op.cls])
             dur = flops / rate + hw.launch_overhead
             deps = [ready[s] for s in (op.slot_c, op.slot_a, op.slot_b) if s >= 0]
             deps.append(reads[op.slot_c])   # WAR: output slot still being read
@@ -331,7 +359,8 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
             span("link", start, t_link, f"B{op.i},{op.j}->d{d}")
         else:  # compute
             flops = _TASK_FLOPS[op.kind](tb)
-            dur = flops / hw.flops[lad[op.cls]] + hw.launch_overhead
+            dur = (flops / hw.task_rate(op.kind.value, lad[op.cls])
+                   + hw.launch_overhead)
             deps = [ready[d][s]
                     for s in (op.slot_c, op.slot_a, op.slot_b) if s >= 0]
             deps.append(reads[d][op.slot_c])
@@ -430,6 +459,50 @@ def crosscheck_executed_volume(msched: MultiDeviceSchedule, executed: dict,
                   if executed.get(k) != v}
     return {"match": not mismatches, "expected": expected,
             "executed": executed, "mismatches": mismatches}
+
+
+def chrome_trace(result, path=None) -> dict:
+    """Export a recorded timeline as chrome://tracing ("Trace Event") JSON.
+
+    Works for both :class:`SimResult` and :class:`MultiSimResult` (any
+    object with a ``timeline`` of ``(engine, start, end, label)`` spans
+    and a ``makespan``); each engine becomes one named track ("thread"),
+    every span a complete ``"X"`` event with microsecond timestamps.
+    Load the file at chrome://tracing or https://ui.perfetto.dev.
+
+    Returns the trace dict; with ``path`` given it is also written there
+    as JSON.  Simulations must be run with ``record_timeline=True``.
+    """
+    if not result.timeline:
+        raise ValueError("timeline not recorded: simulate with "
+                         "record_timeline=True before exporting a trace")
+    engines = []
+    for engine, _, _, _ in result.timeline:
+        if engine not in engines:
+            engines.append(engine)
+    events = [
+        {"name": "thread_name", "ph": "M", "pid": 0, "tid": t,
+         "args": {"name": engine}}
+        for t, engine in enumerate(engines)
+    ]
+    tids = {engine: t for t, engine in enumerate(engines)}
+    for engine, start, end, label in result.timeline:
+        events.append({
+            "name": label, "cat": engine, "ph": "X",
+            "ts": start * 1e6, "dur": (end - start) * 1e6,
+            "pid": 0, "tid": tids[engine],
+        })
+    trace = {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "metadata": {"makespan_s": result.makespan,
+                     "tflops": result.tflops},
+    }
+    if path is not None:
+        import json
+        with open(path, "w") as f:
+            json.dump(trace, f)
+    return trace
 
 
 def ascii_trace(result: SimResult, width: int = 100) -> str:

@@ -52,10 +52,10 @@ import numpy as np
 
 from .precision import LADDERS, PrecisionPlan, uniform_plan
 from .schedule import (MultiDeviceSchedule, build_multidevice_schedule,
-                       build_schedule)
+                       build_schedule, min_cache_slots)
 from .tiling import TileLayout, from_tiles, to_tiles
 
-_POLICIES = ("sync", "async", "v1", "v2", "v3", "v4")
+_POLICIES = ("sync", "async", "v1", "v2", "v3", "v4", "auto")
 _MULTIDEV_POLICIES = ("sync", "v1", "v2", "v3")
 _BACKENDS = ("auto", "jax", "numpy")
 _DEFAULT_BLOCK = (4, 4)
@@ -68,25 +68,35 @@ class CholeskyConfig:
     Hashable by value (including the optional :class:`PrecisionPlan`), so
     it can key the plan cache: equal configs share one schedule and one
     compiled executor.
+
+    Open dimensions (0.4): ``tb=0`` and/or ``policy="auto"`` leave those
+    axes to the autotuner — ``plan()`` resolves them through
+    :func:`repro.tune.resolve_config` (exact-simulation search against
+    the ``hw`` preset, the process default hardware, or the ``gh200``
+    preset) before building the schedule.  With the tuner engaged,
+    ``cache_slots=0`` means "search slot budgets" instead of "builder
+    default".
     """
 
-    tb: int                                   # tile size
-    policy: str = "v3"                        # sync/async/v1/v2/v3/v4
+    tb: int                                   # tile size (0 = autotune)
+    policy: str = "v3"                        # sync/async/v1-v4, or "auto"
     eps_target: Optional[float] = None        # Higham-Mary accuracy level
     ladder: str = "tpu"                       # precision ladder name
     plan: Optional[PrecisionPlan] = None      # explicit per-tile classes
-    cache_slots: int = 0                      # 0 = policy default
+    cache_slots: int = 0                      # 0 = policy default/tuned
     backend: str = "auto"                     # auto -> jax if devices suffice
     compute_dtype: Any = None                 # jax backend compute dtype
     use_pallas: bool = False                  # Pallas tile kernels (jax)
     block: tuple = _DEFAULT_BLOCK             # v4 (h, w) update block
     ndev: int = 1                             # 1D block-cyclic devices
+    hw: Optional[str] = None                  # analytics.HW preset name
 
     def __post_init__(self):
         object.__setattr__(self, "policy", str(self.policy).lower())
         object.__setattr__(self, "block", tuple(self.block))
-        if self.tb < 1:
-            raise ValueError(f"tb must be >= 1, got {self.tb}")
+        if self.tb < 0:
+            raise ValueError(f"tb must be >= 1, or 0 to let the tuner "
+                             f"pick it, got {self.tb}")
         if self.policy not in _POLICIES:
             raise ValueError(f"unknown policy {self.policy!r}; "
                              f"expected one of {_POLICIES}")
@@ -110,20 +120,44 @@ class CholeskyConfig:
                 or any(not isinstance(x, int) or x < 1 for x in self.block)):
             raise ValueError(f"block must be two positive ints, "
                              f"got {self.block!r}")
-        if self.policy != "v4" and self.block != _DEFAULT_BLOCK:
+        if self.policy not in ("v4", "auto") and self.block != _DEFAULT_BLOCK:
             raise ValueError(
                 f"block={self.block} is only meaningful for policy='v4' "
                 f"(got policy={self.policy!r})")
-        if self.policy == "v4" and self.cache_slots > 0:
-            h, w = self.block
-            if self.cache_slots < h * w + w + 2:
+        if self.cache_slots > 0 and self.policy != "auto":
+            # eager slot-minimum validation: an unbuildable budget used to
+            # surface only as a cache-thrash RuntimeError deep inside
+            # schedule construction
+            floor = min_cache_slots(self.policy, self.block)
+            if self.cache_slots < floor:
                 raise ValueError(
-                    f"v4 with block={self.block} needs >= h*w + w + 2 = "
-                    f"{h * w + w + 2} cache slots, got {self.cache_slots}")
-        if self.ndev > 1 and self.policy not in _MULTIDEV_POLICIES:
+                    f"policy {self.policy!r}"
+                    + (f" with block={self.block}" if self.policy == "v4"
+                       else "")
+                    + f" needs >= {floor} cache slots"
+                    + (" (h*w + w + 2)" if self.policy == "v4" else "")
+                    + f", got {self.cache_slots}")
+        if self.ndev > 1 and self.policy not in _MULTIDEV_POLICIES \
+                and self.policy != "auto":
             raise ValueError(
                 f"multi-device schedules support sync/v1/v2/v3, "
                 f"got {self.policy!r}")
+        if self.hw is not None:
+            from .analytics import HW
+            if self.hw not in HW:
+                raise ValueError(f"unknown hw preset {self.hw!r}; "
+                                 f"expected one of {tuple(HW)}")
+            mem = HW[self.hw].mem_bytes
+            if mem > 0 and self.tb > 0 and self.cache_slots > 0:
+                # 8-byte (f64 compute) device tiles; the OOC constraint
+                # that used to fail only at executor build time
+                need = self.cache_slots * self.tb * self.tb * 8
+                if need > mem:
+                    raise ValueError(
+                        f"cache_slots={self.cache_slots} of "
+                        f"{self.tb}x{self.tb} f64 tiles needs "
+                        f"{need / 1e9:.1f} GB, but hw={self.hw!r} has "
+                        f"mem_bytes={mem / 1e9:.1f} GB")
         if self.use_pallas and self.resolved_backend() != "jax":
             raise ValueError("use_pallas requires the 'jax' backend, "
                              f"got backend={self.backend!r} "
@@ -132,6 +166,13 @@ class CholeskyConfig:
             raise ValueError("compute_dtype is only supported on the 'jax' "
                              f"backend, got backend={self.backend!r} "
                              f"(resolved {self.resolved_backend()!r})")
+
+    @property
+    def needs_tuning(self) -> bool:
+        """True when an open dimension (``tb=0`` / ``policy="auto"``)
+        must be resolved by :func:`repro.tune.resolve_config` before a
+        schedule can be built."""
+        return self.tb == 0 or self.policy == "auto"
 
     def resolved_backend(self) -> str:
         """Backend ``'auto'`` actually runs on.
@@ -164,6 +205,12 @@ class CholeskyConfig:
         """
         if self.eps_target is None:
             return self
+        if self.tb == 0:
+            raise ValueError(
+                "specialize() tiles the matrix with tb, which is still "
+                "open (tb=0): resolve the config first — e.g. "
+                "repro.tune.tune(n, config, sample=a, eps_target=...) "
+                "searches tb and the precision plan together")
         from .cholesky import plan_for_matrix
         a = np.asarray(a, dtype=np.float64)
         if a.ndim != 2 or a.shape[0] != a.shape[1]:
@@ -437,11 +484,30 @@ def plan(n: int, config: CholeskyConfig | None = None,
             "cannot be planned ahead of the data: freeze it with "
             "config.specialize(a) (or pass plan=plan_for_matrix(...)), or "
             "use the one-shot ooc_cholesky()")
+    auto_key = None
+    if config.needs_tuning:
+        # open dimensions (tb=0 / policy="auto"): resolve through the
+        # autotuner — exact-simulation search against the config's hw
+        # preset (or the process default model), memoized in the tuning
+        # db.  The plan is cached under the auto key too, so repeat
+        # plan() calls with the same auto config skip even the db hit;
+        # the key carries the resolving model's identity, so installing
+        # a different default hardware model re-resolves instead of
+        # serving a plan tuned for the previous one.
+        from repro.tune import resolve_config, resolution_token
+        auto_key = (n, config, resolution_token(config))
+        cached = _PLAN_CACHE.get(auto_key)
+        if cached is not None:
+            _PLAN_CACHE.move_to_end(auto_key)
+            return cached
+        config = resolve_config(n, config)
     layout = TileLayout(n, config.tb)   # validates n % tb == 0
     key = (n, config)
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         _PLAN_CACHE.move_to_end(key)
+        if auto_key is not None:
+            _PLAN_CACHE[auto_key] = cached
         return cached
     _SCHEDULE_BUILDS += 1
     # resolve the default plan here (not in the builders) so the
@@ -459,6 +525,8 @@ def plan(n: int, config: CholeskyConfig | None = None,
         msched = MultiDeviceSchedule.from_single(single)
     p = CholeskyPlan(n=n, config=config, schedule=msched, _single=single)
     _PLAN_CACHE[key] = p
+    if auto_key is not None:
+        _PLAN_CACHE[auto_key] = p
     while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
         _PLAN_CACHE.popitem(last=False)
     return p

@@ -53,6 +53,48 @@ from .precision import PrecisionPlan, BYTES, uniform_plan
 from .tiling import TileLayout
 
 
+def min_cache_slots(policy: str, block: tuple = (4, 4)) -> int:
+    """Smallest device-slot budget a policy's schedule can be built with.
+
+    These are the worst-case *concurrent pin* counts of each builder (one
+    victim slot must remain findable at every cache load), previously
+    inlined where they were needed:
+
+      * ``sync``/``async`` use fixed slots 0..2 (C, A, B);
+      * ``v1`` adds slot 3 for the TRSM diagonal;
+      * ``v2`` pins C+A+B during a GEMM;
+      * ``v3`` additionally keeps the column's diagonal tile pinned;
+      * ``v4`` pins an h x w accumulator block plus w panel operands plus
+        the A operand and the diagonal (``h*w + w + 2``).
+
+    The tuner's feasibility filter and ``CholeskyConfig``'s eager
+    validation both consult this instead of re-deriving the constants.
+    """
+    policy = policy.lower()
+    if policy == "v4":
+        h, w = block
+        return h * w + w + 2
+    return {"sync": 3, "async": 3, "v1": 4, "v2": 3, "v3": 4}[policy]
+
+
+def default_cache_slots(policy: str, nt: int, block: tuple = (4, 4),
+                        multidevice: bool = False) -> int:
+    """Slot budget the builders use when ``cache_slots`` is 0 (unset).
+
+    Exactly the historical inlined defaults (golden op streams depend on
+    them): ``2*nt + 2`` (floor 4) for the cache-table policies, the fixed
+    4-slot window for multi-device sync/v1, and ``h*w + h + w + 4`` for
+    the 2D-blocked v4.
+    """
+    policy = policy.lower()
+    if policy == "v4":
+        h, w = block
+        return h * w + h + w + 4
+    if multidevice and policy not in ("v2", "v3"):
+        return 4
+    return max(4, nt * 2 + 2)
+
+
 class OpKind(enum.Enum):
     LOAD = "load"        # host tile (i,j) -> device slot (cast to tile class)
     STORE = "store"      # device slot -> host tile (i,j) (cast to tile class)
@@ -233,7 +275,7 @@ def build_schedule(
     if policy == "v4":
         return _build_v4(nt, tb, plan, cache_slots, block)
     if cache_slots <= 0:
-        cache_slots = max(4, nt * 2 + 2)
+        cache_slots = default_cache_slots(policy, nt)
 
     ops: list[Op] = []
     emit = ops.append
@@ -384,10 +426,11 @@ def _build_v4(nt: int, tb: int, plan: PrecisionPlan, cache_slots: int,
     """
     h, w = block
     if cache_slots <= 0:
-        cache_slots = h * w + h + w + 4
-    if cache_slots < h * w + w + 2:
+        cache_slots = default_cache_slots("v4", nt, block)
+    if cache_slots < min_cache_slots("v4", block):
         raise ValueError(
-            f"v4 needs >= h*w + w + 2 = {h*w+w+2} slots, got {cache_slots}")
+            f"v4 needs >= h*w + w + 2 = {min_cache_slots('v4', block)} "
+            f"slots, got {cache_slots}")
 
     ops: list[Op] = []
     emit = ops.append
@@ -641,7 +684,7 @@ def build_multidevice_schedule(
     reuse_accum = policy in ("v1", "v2", "v3")
     pin_diag = policy == "v3"
     if cache_slots <= 0:
-        cache_slots = max(4, nt * 2 + 2) if operand_cache else 4
+        cache_slots = default_cache_slots(policy, nt, multidevice=True)
     panel_base = cache_slots          # panel slot of tile (k, n) = base + n
 
     streams: list[list[Op]] = [[] for _ in range(ndev)]

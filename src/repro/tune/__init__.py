@@ -1,0 +1,51 @@
+"""repro.tune — hardware calibration + cost-model autotuner.
+
+The paper's benchmarking campaign (tile size, cache capacity, OOC policy,
+precision ladder — swept by hand per A100/H100/GH200 platform) is a
+tuning problem the static scheduler makes automatable: every candidate
+schedule has an exact, deterministic cost under a hardware model.  This
+subsystem closes the loop in three layers:
+
+  1. **calibration** (:mod:`repro.tune.calibrate`) — micro-benchmarks on
+     the live backend produce a *measured* ``HardwareModel`` (per-kernel
+     per-class rates, link bandwidth, launch/alloc overheads, device
+     memory, hardware fingerprint);
+  2. **search** (:mod:`repro.tune.search`) — enumerate every feasible
+     ``(tb, policy, cache_slots, precision plan)`` candidate and rank
+     them by exact event simulation;
+  3. **persistence + planner integration** (:mod:`repro.tune.db`,
+     :mod:`repro.tune.autotune`) — winners memoized by hardware
+     fingerprint; ``repro.plan(n, CholeskyConfig(tb=0, policy="auto"))``
+     resolves through :func:`resolve_config` transparently.
+
+Quickstart::
+
+    import repro
+    from repro import tune
+
+    # fully automatic: plan() tunes tb/policy/cache_slots for you
+    solver = repro.plan(n, repro.CholeskyConfig(tb=0, policy="auto",
+                                                hw="gh200")).compile()
+
+    # explicit campaign against the measured machine
+    model = tune.calibrate()                  # micro-benchmark this host
+    result = tune.tune(n, hw=model)           # ranked candidate table
+    solver = repro.plan(n, result.config).compile()
+"""
+from .autotune import (DEFAULT_HW_PRESET, clear_tuning_cache, default_config,
+                       resolution_token, resolve_config,
+                       set_default_hardware, tune)
+from .calibrate import (calibrate, hardware_fingerprint, model_from_dict,
+                        model_to_dict)
+from .db import TuningDB, config_from_dict, config_to_dict, default_db_path
+from .search import (Candidate, TuneResult, feasible_tbs, is_feasible,
+                     score_config, search, slot_candidates)
+
+__all__ = [
+    "tune", "resolve_config", "resolution_token", "default_config",
+    "set_default_hardware", "clear_tuning_cache", "DEFAULT_HW_PRESET",
+    "calibrate", "hardware_fingerprint", "model_to_dict", "model_from_dict",
+    "TuningDB", "config_to_dict", "config_from_dict", "default_db_path",
+    "search", "TuneResult", "Candidate", "feasible_tbs", "is_feasible",
+    "slot_candidates", "score_config",
+]

@@ -1,0 +1,257 @@
+"""Hardware calibration: micro-benchmarks -> a *measured* HardwareModel.
+
+The datasheet presets in :data:`repro.core.analytics.HW` carry published
+peaks; the simulator is only as predictive as those numbers are honest for
+the backend actually running (Le Fèvre et al. make the same point for
+A64FX Cholesky: measured kernel rates, not published ones, make a cost
+model transferable).  This module times, on the live JAX backend:
+
+  * tb x tb POTRF / TRSM / SYRK / GEMM kernels per precision class
+    (the exact kernel fns the executors replay, so the measured rate
+    includes the cast-through-class behaviour of the real pipeline);
+  * host<->device transfer bandwidth (``jax.device_put`` up, host
+    ``np.asarray`` readback down) at several transfer sizes, keeping the
+    steady-state large-transfer rate;
+  * jit launch overhead and buffer-allocation overhead;
+  * device memory capacity (``memory_stats()`` where the backend exposes
+    it, a conservative fallback otherwise);
+
+and returns a frozen :class:`HardwareModel` with ``source="measured"``
+and a :func:`hardware_fingerprint` identity hash that keys the tuning
+database: re-tuning on the same machine is a dict lookup, moving to a
+different machine invalidates the cache automatically.
+
+Everything runs in seconds at the default ``tb=256`` — small enough for
+the CPU CI smoke leg, honest enough to rank schedule candidates.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+
+import numpy as np
+
+from repro.core.analytics import GB, HardwareModel
+from repro.core.precision import BYTES, LADDERS
+
+# classes measured by default: every precision name any ladder can assign
+_ALL_CLASSES = ("f64", "f32", "f16", "bf16", "f8e4m3")
+
+# fallback device-memory capacity when the backend reports none (CPU CI):
+# deliberately small so OOC feasibility filtering stays exercised.
+_FALLBACK_MEM_BYTES = 8 * GB
+
+_TASK_FLOP_COUNT = {
+    "gemm": lambda tb: 2 * tb**3,
+    "syrk": lambda tb: tb**3,
+    "trsm": lambda tb: tb**3,
+    "potrf": lambda tb: tb**3 / 3.0,
+}
+
+
+def hardware_fingerprint() -> str:
+    """Identity hash of the live backend (tuning-db cache key).
+
+    Folds in everything that changes measured rates or the executor's
+    numerics: platform, device kind and count, jax version, and the x64
+    flag (with x64 off the f64 class degrades to f32 end to end).
+    """
+    import jax
+    dev = jax.devices()[0]
+    ident = "|".join([
+        jax.default_backend(),
+        getattr(dev, "device_kind", type(dev).__name__),
+        str(jax.device_count()),
+        jax.__version__,
+        f"x64={bool(jax.config.jax_enable_x64)}",
+    ])
+    return hashlib.sha256(ident.encode()).hexdigest()[:12]
+
+
+def _best_seconds(fn, repeats: int) -> float:
+    """Min-of-repeats wall time of ``fn()`` (result blocked on)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return max(best, 1e-9)
+
+
+def _class_dtype(cls_name: str):
+    """jnp dtype a class's tiles are cast through on the live backend
+    (the executor's `_jx_round` semantics: f64 degrades to f32 with x64
+    off; every class casts back to the compute dtype for the kernel)."""
+    import jax
+    from repro.core.cholesky import _JNP_DTYPES
+    import jax.numpy as jnp
+    if cls_name == "f64" and not jax.config.jax_enable_x64:
+        return jnp.float32
+    return _JNP_DTYPES[cls_name]
+
+
+def _measure_kernels(tb: int, classes, repeats: int) -> dict:
+    """Time the executor's own kernel fns per (task, class) and return
+    ``{task: {class: flop_rate}}``.
+
+    The kernel runs exactly as the executor would: operands round-trip
+    through the class dtype, the arithmetic runs in the compute dtype.
+    So a "bf16-class GEMM" here is cast-to-bf16 + matmul — the honest
+    rate of that class on *this* backend, which is what the simulator
+    needs to rank schedules (not the MXU's marketing number).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.cholesky import _make_kernel_fns
+
+    compute_dtype = (jnp.float64 if jax.config.jax_enable_x64
+                     else jnp.float32)
+    kf = _make_kernel_fns(use_pallas=False, interpret=True)
+    rng = np.random.default_rng(0)
+    spd = np.eye(tb) * (2.0 * tb)
+    spd += rng.standard_normal((tb, tb)) @ rng.standard_normal((tb, tb)).T / tb
+    c_host = jnp.asarray(spd, dtype=compute_dtype)
+    l_host = jnp.asarray(np.linalg.cholesky(spd), dtype=compute_dtype)
+    a_host = jnp.asarray(rng.standard_normal((tb, tb)), dtype=compute_dtype)
+    b_host = jnp.asarray(rng.standard_normal((tb, tb)), dtype=compute_dtype)
+
+    rates: dict = {task: {} for task in _TASK_FLOP_COUNT}
+    for cls_name in classes:
+        wire = _class_dtype(cls_name)
+
+        def through(x):
+            # class round-trip: what LOAD does to every operand tile
+            return x.astype(wire).astype(compute_dtype)
+
+        jobs = {
+            "gemm": jax.jit(lambda c, a, b: kf["gemm"](
+                through(c), through(a), through(b))),
+            "syrk": jax.jit(lambda c, a: kf["syrk"](through(c), through(a))),
+            "trsm": jax.jit(lambda l, c: kf["trsm"](through(l), through(c))),
+            "potrf": jax.jit(lambda c: kf["potrf"](through(c))),
+        }
+        args = {
+            "gemm": (c_host, a_host, b_host),
+            "syrk": (c_host, a_host),
+            "trsm": (l_host, b_host),
+            "potrf": (c_host,),
+        }
+        for task, fn in jobs.items():
+            try:
+                fn(*args[task]).block_until_ready()       # compile/warm
+                dt = _best_seconds(lambda: fn(*args[task]), repeats)
+            except Exception:
+                # dtype unsupported by this backend's kernels: fall back
+                # to the compute-dtype rate (what execution would do too)
+                rates[task][cls_name] = rates[task].get(
+                    "f64", _TASK_FLOP_COUNT[task](tb) / 1e-3)
+                continue
+            rates[task][cls_name] = _TASK_FLOP_COUNT[task](tb) / dt
+    return rates
+
+
+def _measure_bandwidth(sizes_mb, repeats: int) -> tuple[float, float]:
+    """Steady-state host->device / device->host bytes per second."""
+    import jax
+    import jax.numpy as jnp
+    dev = jax.devices()[0]
+    h2d = d2h = 0.0
+    for mb in sizes_mb:
+        nbytes = int(mb * 1e6)
+        host = np.zeros(nbytes // 4, dtype=np.float32)
+        dt_up = _best_seconds(lambda: jax.device_put(host, dev), repeats)
+        x = jax.device_put(host, dev)
+        x.block_until_ready()
+        dt_down = _best_seconds(lambda: np.asarray(x), repeats)
+        # keep the best (largest-transfer) rate: small transfers are
+        # latency-bound and would understate the link
+        h2d = max(h2d, nbytes / dt_up)
+        d2h = max(d2h, nbytes / dt_down)
+    return h2d, d2h
+
+
+def _measure_overheads(repeats: int) -> tuple[float, float]:
+    """(jit launch overhead, buffer alloc overhead) in seconds/event."""
+    import jax
+    import jax.numpy as jnp
+    tiny = jnp.zeros((8, 8))
+    f = jax.jit(lambda x: x + 1.0)
+    f(tiny).block_until_ready()          # compile
+    n = 50
+    t0 = time.perf_counter()
+    y = tiny
+    for _ in range(n):
+        y = f(y)
+    y.block_until_ready()
+    launch = max((time.perf_counter() - t0) / n, 1e-8)
+    alloc = _best_seconds(lambda: jnp.zeros((256, 256)), repeats)
+    return launch, alloc
+
+
+def _device_mem_bytes() -> float:
+    """Device memory capacity, from the backend when it reports one."""
+    import jax
+    try:
+        stats = jax.devices()[0].memory_stats()
+        if stats and stats.get("bytes_limit", 0) > 0:
+            return float(stats["bytes_limit"])
+    except Exception:
+        pass
+    return float(_FALLBACK_MEM_BYTES)
+
+
+def calibrate(tb: int = 256,
+              classes=None,
+              repeats: int = 3,
+              transfer_sizes_mb=(1, 8, 32),
+              mem_bytes: float | None = None,
+              name: str | None = None) -> HardwareModel:
+    """Measure the live backend and return a ``source="measured"`` model.
+
+    The result plugs into everything the datasheet presets do —
+    ``simulate``/``simulate_multi``, the tuner's candidate search — but
+    with per-kernel, per-class rates measured through the executor's own
+    kernel fns, real link bandwidth, and the device's actual memory
+    capacity (``mem_bytes`` overrides detection, e.g. to model a smaller
+    slot budget than the hardware has).
+    """
+    import jax
+    classes = tuple(classes) if classes is not None else _ALL_CLASSES
+    for c in classes:
+        if c not in BYTES:
+            raise ValueError(f"unknown precision class {c!r}; "
+                             f"expected a subset of {_ALL_CLASSES}")
+    kernel_flops = _measure_kernels(tb, classes, repeats)
+    h2d_bw, d2h_bw = _measure_bandwidth(transfer_sizes_mb, repeats)
+    launch, alloc = _measure_overheads(repeats)
+    fp = hardware_fingerprint()
+    dev = jax.devices()[0]
+    if name is None:
+        kind = getattr(dev, "device_kind", jax.default_backend())
+        name = f"measured-{str(kind).lower().replace(' ', '-')}-{fp[:6]}"
+    return HardwareModel(
+        name=name,
+        # class peaks = the measured GEMM rate (the dominant kernel);
+        # per-kernel detail rides in kernel_flops for the simulator
+        flops={c: kernel_flops["gemm"][c] for c in classes},
+        h2d_bw=h2d_bw,
+        d2h_bw=d2h_bw,
+        alloc_overhead=alloc,
+        launch_overhead=launch,
+        mem_bytes=float(mem_bytes) if mem_bytes else _device_mem_bytes(),
+        source="measured",
+        fingerprint=fp,
+        kernel_flops=kernel_flops,
+    )
+
+
+def model_to_dict(hw: HardwareModel) -> dict:
+    """JSON-serializable form of a model (see :func:`model_from_dict`)."""
+    import dataclasses
+    return dataclasses.asdict(hw)
+
+
+def model_from_dict(d: dict) -> HardwareModel:
+    return HardwareModel(**d)

@@ -1,0 +1,290 @@
+"""Candidate search: enumerate feasible configs, score by exact simulation.
+
+Because the schedule is static, every candidate ``(tb, policy,
+cache_slots, precision plan, ndev)`` has an *exact* deterministic cost
+under a hardware model — :func:`repro.core.analytics.simulate` /
+:func:`simulate_multi` replay the op stream event by event.  The search
+is therefore a plain enumerate-build-simulate loop; no noisy on-device
+trials, no search heuristics, and the same code path scores datasheet
+presets (CPU CI) and calibrated measured models.
+
+Feasibility is enforced *before* scoring, mirroring exactly what the
+builders/executors would reject later:
+
+  * ``tb | n`` (the tile grid must cover the matrix);
+  * per-policy slot minimums (:func:`repro.core.schedule.min_cache_slots`);
+  * the OOC device-memory cap: ``(cache_slots + panel slots) * tb^2 * 8
+    <= hw.mem_bytes`` — at large ``n`` this is the constraint that rules
+    out cache-everything configs and forces real policy selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.analytics import HW, HardwareModel, simulate, simulate_multi
+from repro.core.api import _DEFAULT_BLOCK, CholeskyConfig
+from repro.core.precision import PrecisionPlan, uniform_plan
+from repro.core.schedule import (build_multidevice_schedule, build_schedule,
+                                 default_cache_slots, min_cache_slots)
+
+# search-space bounds: nt below 2 is in-core (no schedule to tune), nt
+# above NT_MAX makes candidate *scoring* itself the bottleneck (schedule
+# construction is O(nt^3) ops) without changing the ranking — past ~48
+# tiles per side the per-op overheads are amortized and bigger grids only
+# move more bytes.
+NT_MIN = 2
+NT_MAX = 48
+TB_MIN = 8
+
+_SINGLE_POLICIES = ("sync", "async", "v1", "v2", "v3", "v4")
+_MULTI_POLICIES = ("sync", "v1", "v2", "v3")
+_POLICY_RANK = {p: i for i, p in enumerate(_SINGLE_POLICIES)}
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One scored point of the search space."""
+    config: CholeskyConfig
+    makespan: float
+    tflops: float
+    loads_bytes: int
+    stores_bytes: int
+    link_bytes: int = 0          # interconnect volume (ndev > 1)
+    footprint_bytes: int = 0     # device slot-buffer bytes the config needs
+
+    def row(self) -> dict:
+        """Flat machine-readable record (bench JSON / TuneResult table)."""
+        c = self.config
+        return {
+            "tb": c.tb, "policy": c.policy, "cache_slots": c.cache_slots,
+            "ndev": c.ndev, "makespan_s": self.makespan,
+            "tflops": self.tflops, "loads_bytes": self.loads_bytes,
+            "stores_bytes": self.stores_bytes,
+            "link_bytes": self.link_bytes,
+            "footprint_bytes": self.footprint_bytes,
+        }
+
+
+@dataclasses.dataclass
+class TuneResult:
+    """Ranked outcome of one search: ``config`` is the winner, ``table``
+    the full predicted makespan/volume comparison."""
+    n: int
+    ndev: int
+    hw: HardwareModel
+    candidates: list        # Candidate, ranked best-first
+    eps_target: Optional[float] = None
+
+    @property
+    def config(self) -> CholeskyConfig:
+        return self.candidates[0].config
+
+    @property
+    def best(self) -> Candidate:
+        return self.candidates[0]
+
+    def table(self) -> list[dict]:
+        return [c.row() for c in self.candidates]
+
+
+def feasible_tbs(n: int, hw: HardwareModel, ndev: int = 1,
+                 policies=_SINGLE_POLICIES) -> list[int]:
+    """Tile sizes whose grid covers ``n`` and whose *minimum* working set
+    fits the device (largest tb first: fewer, bigger tiles are the cheap
+    end of the search)."""
+    out = []
+    for nt in range(max(NT_MIN, ndev), NT_MAX + 1):
+        if n % nt:
+            continue
+        tb = n // nt
+        if tb < TB_MIN:
+            break
+        reserve = nt if ndev > 1 else 0
+        least = min(min_cache_slots(p) for p in policies)
+        if hw.max_cache_slots(tb, reserve) >= least:
+            out.append(tb)
+    return out
+
+
+def slot_candidates(policy: str, nt: int, tb: int, hw: HardwareModel,
+                    ndev: int = 1, block: tuple = (4, 4)) -> list[int]:
+    """Feasible cache-slot budgets worth scoring for one (policy, tb).
+
+    Three probes bound the interesting range: the policy minimum (the
+    thrash-iest feasible point), the builder default, and the
+    memory-capped maximum (cache as much as the device holds).  Slot
+    counts only change the op stream for the cache-table policies; the
+    fixed-slot policies get their single minimum.
+    """
+    reserve = nt if ndev > 1 else 0
+    cap = hw.max_cache_slots(tb, reserve)
+    mn = min_cache_slots(policy, block)
+    if cap < mn:
+        return []
+    if policy in ("sync", "async", "v1"):
+        return [mn]
+    default = default_cache_slots(policy, nt, block, multidevice=ndev > 1)
+    # nt*(nt+1)//2 + 1 slots hold every lower tile at once: beyond that,
+    # extra slots cannot change a single cache decision
+    useful_max = min(cap, nt * (nt + 1) // 2 + 1)
+    return sorted({max(s, mn) for s in (mn, min(default, cap), useful_max)})
+
+
+def is_feasible(n: int, config: CholeskyConfig, hw: HardwareModel) -> bool:
+    """The exact predicate the search promises of every returned config."""
+    if config.tb < 1 or n % config.tb:
+        return False
+    nt = n // config.tb
+    if config.cache_slots < min_cache_slots(config.policy, config.block):
+        return False
+    reserve = nt if config.ndev > 1 else 0
+    return config.cache_slots <= hw.max_cache_slots(config.tb, reserve)
+
+
+def _score(n, tb, policy, slots, pplan, ndev, hw, base: CholeskyConfig):
+    nt = n // tb
+    if ndev > 1:
+        msched = build_multidevice_schedule(nt, tb, ndev, policy, slots,
+                                            pplan)
+        r = simulate_multi(msched, hw)
+        loads, stores = msched.loads_bytes(), msched.stores_bytes()
+        link = r.link_bytes
+        nslots = max(msched.stream_nslots(d) for d in range(ndev))
+    else:
+        sched = build_schedule(nt, tb, policy, slots, pplan,
+                               block=base.block)
+        r = simulate(sched, hw)
+        loads, stores = sched.loads_bytes(), sched.stores_bytes()
+        link = 0
+        nslots = slots
+    cfg = dataclasses.replace(
+        base, tb=tb, policy=policy, cache_slots=slots, ndev=ndev,
+        # a custom v4 block must not ride along into non-v4 candidates
+        block=base.block if policy == "v4" else _DEFAULT_BLOCK,
+        plan=pplan if pplan is not None and not _is_uniform_f64(pplan)
+        else base.plan)
+    return Candidate(config=cfg, makespan=r.makespan, tflops=r.tflops,
+                     loads_bytes=loads, stores_bytes=stores,
+                     link_bytes=link,
+                     footprint_bytes=nslots * tb * tb * 8)
+
+
+def _is_uniform_f64(pplan: PrecisionPlan) -> bool:
+    return bool((pplan.classes == 0).all())
+
+
+def score_config(n: int, config: CholeskyConfig,
+                 hw: HardwareModel) -> Candidate:
+    """Exact simulated cost of one *pinned* config, as the builders would
+    run it (``cache_slots=0`` resolves to the builder default) — no
+    feasibility filtering.  This is the honest baseline for
+    tuned-vs-default comparisons: a hand-picked config is scored exactly
+    as written even where the tuner would have rejected it (e.g. a slot
+    budget overflowing ``mem_bytes``)."""
+    if config.tb < 1 or n % config.tb:
+        raise ValueError(f"tb={config.tb} does not tile n={n}")
+    nt = n // config.tb
+    slots = config.cache_slots or default_cache_slots(
+        config.policy, nt, config.block, multidevice=config.ndev > 1)
+    pplan = config.plan or uniform_plan(nt, "f64", config.ladder)
+    return _score(n, config.tb, config.policy, slots, pplan, config.ndev,
+                  hw, config)
+
+
+def search(n: int,
+           hw: HardwareModel,
+           config: CholeskyConfig | None = None,
+           plans_by_tb: dict | None = None,
+           eps_target: Optional[float] = None) -> TuneResult:
+    """Enumerate + score every feasible candidate; return them ranked.
+
+    ``config`` pins the non-searched dimensions and declares which are
+    open: ``tb=0`` searches tile sizes, ``policy="auto"`` searches
+    policies, ``cache_slots=0`` searches slot budgets; a concrete value
+    freezes that axis.  ``plans_by_tb`` optionally maps tile size ->
+    :class:`PrecisionPlan` (built from a representative matrix by
+    :func:`repro.tune.tune`) to score mixed-precision candidates; absent
+    entries score uniform f64.
+
+    Deterministic by construction: candidates are scored by an exact
+    event simulation and ranked by ``(makespan, fewer bytes, policy
+    order, larger tb, fewer slots)`` — equal inputs always return the
+    identical ranking.
+    """
+    base = config if config is not None else CholeskyConfig(
+        tb=0, policy="auto")
+    if base.hw is not None and HW.get(base.hw) is not hw:
+        # scored against a different model than the config names (e.g. a
+        # calibrated one): drop the tag so the returned configs validate
+        # against the model that actually ranked them
+        base = dataclasses.replace(base, hw=None)
+    ndev = base.ndev
+    policy_space = _MULTI_POLICIES if ndev > 1 else _SINGLE_POLICIES
+    policies = (policy_space if base.policy == "auto"
+                else (base.policy,))
+    for p in policies:
+        if p not in policy_space:
+            raise ValueError(f"policy {p!r} unsupported for ndev={ndev}")
+
+    if base.tb > 0:
+        if n % base.tb:
+            raise ValueError(f"tb={base.tb} does not divide n={n}")
+        tbs = [base.tb]
+    else:
+        if base.plan is not None:
+            # an explicit per-tile plan fixes the grid to its nt
+            if n % base.plan.nt:
+                raise ValueError(
+                    f"explicit precision plan has nt={base.plan.nt}, "
+                    f"which does not tile n={n}")
+            tbs = [n // base.plan.nt]
+        else:
+            tbs = feasible_tbs(n, hw, ndev, policies)
+    if not tbs:
+        raise ValueError(
+            f"no feasible tile size for n={n} on {hw.name} "
+            f"(mem_bytes={hw.mem_bytes:.3g}): every divisor in "
+            f"nt=[{NT_MIN}, {NT_MAX}] either leaves tb < {TB_MIN} or "
+            f"overflows device memory at the policy minimum slot count")
+
+    candidates = []
+    for tb in tbs:
+        nt = n // tb
+        if base.plan is not None and base.plan.nt == nt:
+            pplan = base.plan
+        elif plans_by_tb and tb in plans_by_tb:
+            pplan = plans_by_tb[tb]
+        else:
+            pplan = uniform_plan(nt, "f64", base.ladder)
+        for policy in policies:
+            if base.cache_slots > 0:
+                # primitive feasibility probe: constructing a config here
+                # would re-run eager validation and *raise* on the very
+                # combinations this filter exists to skip (e.g. a pinned
+                # budget below v4's minimum while policy="auto")
+                blk = base.block if policy == "v4" else _DEFAULT_BLOCK
+                reserve = nt if ndev > 1 else 0
+                ok = (base.cache_slots >= min_cache_slots(policy, blk)
+                      and base.cache_slots <= hw.max_cache_slots(tb, reserve))
+                slot_opts = [base.cache_slots] if ok else []
+            else:
+                slot_opts = slot_candidates(policy, nt, tb, hw, ndev,
+                                            base.block)
+            for slots in slot_opts:
+                candidates.append(
+                    _score(n, tb, policy, slots, pplan, ndev, hw, base))
+    if not candidates:
+        raise ValueError(
+            f"no feasible (policy, cache_slots) candidate for n={n} on "
+            f"{hw.name}: the pinned dimensions of {base} violate the "
+            f"slot minimums or the device-memory cap")
+    candidates.sort(key=lambda c: (
+        c.makespan,
+        c.loads_bytes + c.stores_bytes + c.link_bytes,
+        _POLICY_RANK[c.config.policy],
+        -c.config.tb,
+        c.config.cache_slots,
+    ))
+    return TuneResult(n=n, ndev=ndev, hw=hw, candidates=candidates,
+                      eps_target=eps_target)

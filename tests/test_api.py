@@ -15,7 +15,9 @@ from repro.core.tiling import random_spd, to_tiles
 # CholeskyConfig eager validation
 
 @pytest.mark.parametrize("kwargs, match", [
-    (dict(tb=0), "tb"),
+    # tb=0 is now the autotune sentinel (see test_tune.py); negatives
+    # remain invalid
+    (dict(tb=-1), "tb"),
     (dict(tb=32, policy="bogus"), "policy"),
     (dict(tb=32, backend="torch"), "backend"),
     (dict(tb=32, ladder="cuda"), "ladder"),

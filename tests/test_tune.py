@@ -1,0 +1,418 @@
+"""repro.tune: calibration, candidate search, db persistence, planner
+integration, and the tuner's feasibility/optimality invariants."""
+import json
+
+import numpy as np
+import pytest
+
+import repro
+from repro import tune
+from repro.core import api
+from repro.core.analytics import HW, HardwareModel, chrome_trace, simulate
+from repro.core.schedule import (build_schedule, default_cache_slots,
+                                 min_cache_slots)
+
+from _hypothesis_compat import given, settings, st
+
+PRESETS = tuple(HW)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_tuning_state():
+    tune.clear_tuning_cache()
+    tune.set_default_hardware(None)
+    api.clear_plan_cache()
+    yield
+    tune.clear_tuning_cache()
+    tune.set_default_hardware(None)
+    api.clear_plan_cache()
+
+
+def _ooc_n(hw: HardwareModel) -> int:
+    """Smallest power of two whose f64 matrix is ~2x device memory."""
+    n = 1 << 12
+    while 8 * n * n < 2 * hw.mem_bytes:
+        n <<= 1
+    return n
+
+
+# ---------------------------------------------------------------------------
+# search invariants
+
+def test_every_candidate_is_feasible_on_every_preset():
+    """The search's core promise: tb | n, slot minimums respected, and
+    the device-memory cap honoured — for every candidate, not just the
+    winner — at an n where the matrix genuinely exceeds mem_bytes."""
+    for name in PRESETS:
+        hw = HW[name]
+        n = _ooc_n(hw)
+        assert 8 * n * n > hw.mem_bytes          # genuinely out-of-core
+        res = tune.search(n, hw)
+        assert res.candidates
+        for cand in res.candidates:
+            c = cand.config
+            assert tune.is_feasible(n, c, hw), (name, c)
+            assert n % c.tb == 0
+            assert c.cache_slots >= min_cache_slots(c.policy, c.block)
+            assert c.cache_slots * c.tb * c.tb * 8 <= hw.mem_bytes
+            assert not c.needs_tuning
+
+
+def test_tuned_beats_or_matches_default_on_every_preset():
+    """Acceptance bar: at OOC sizes the tuned config's simulated makespan
+    is <= the hand-picked default (V3, nt~32, builder-default slots)."""
+    for name in PRESETS:
+        hw = HW[name]
+        n = _ooc_n(hw)
+        best = tune.search(n, hw).best
+        dflt = tune.score_config(n, tune.default_config(n), hw)
+        assert best.makespan <= dflt.makespan * (1 + 1e-12), name
+
+
+def test_search_is_deterministic():
+    hw = HW["tpu-v5e"]
+    n = _ooc_n(hw)
+    r1 = tune.search(n, hw)
+    r2 = tune.search(n, hw)
+    assert [c.config for c in r1.candidates] == \
+        [c.config for c in r2.candidates]
+    assert [c.makespan for c in r1.candidates] == \
+        [c.makespan for c in r2.candidates]
+
+
+def test_search_respects_pinned_dimensions():
+    hw = HW["gh200"]
+    n = _ooc_n(hw)
+    tb = n // 16
+    res = tune.search(n, hw, repro.CholeskyConfig(tb=tb, policy="auto"))
+    assert all(c.config.tb == tb for c in res.candidates)
+    assert len({c.config.policy for c in res.candidates}) > 1
+    res = tune.search(n, hw, repro.CholeskyConfig(tb=0, policy="v3"))
+    assert all(c.config.policy == "v3" for c in res.candidates)
+    assert len({c.config.tb for c in res.candidates}) > 1
+
+
+def test_search_winner_simulates_to_its_reported_makespan():
+    """The ranked numbers are exact replays: rebuilding the winner's
+    schedule and simulating it reproduces the reported makespan."""
+    hw = HW["tpu-v5e"]
+    n = _ooc_n(hw)
+    best = tune.search(n, hw).best
+    c = best.config
+    sched = build_schedule(n // c.tb, c.tb, c.policy, c.cache_slots,
+                           block=c.block)
+    assert simulate(sched, hw).makespan == pytest.approx(
+        best.makespan, rel=1e-12)
+
+
+@settings(max_examples=6, deadline=None)
+@given(preset=st.sampled_from(PRESETS),
+       nt=st.integers(4, 12),
+       ndev=st.integers(1, 2))
+def test_property_search_feasible_and_ranked(preset, nt, ndev):
+    """Hypothesis-compat sweep: any (preset, n, ndev) search returns
+    feasible candidates in monotone makespan order, winner first.
+    Slots pinned (feasible for every policy) to bound the sweep's cost —
+    the slot axis is covered by the preset tests above."""
+    hw = HW[preset]
+    n = nt * 256
+    cfg = repro.CholeskyConfig(tb=0, policy="auto", ndev=ndev,
+                               cache_slots=24)
+    res = tune.search(n, hw, cfg)
+    spans = [c.makespan for c in res.candidates]
+    assert spans == sorted(spans)
+    assert res.best.makespan == min(spans)
+    for cand in res.candidates:
+        assert tune.is_feasible(n, cand.config, hw)
+        assert cand.config.ndev == ndev
+
+
+def test_search_skips_infeasible_policies_under_pinned_slots():
+    """Regression: a pinned budget below some policy's minimum used to
+    *raise* out of the search (the feasibility probe constructed a
+    validating config) instead of filtering that policy out."""
+    hw = HW["gh200"]
+    # 8 slots: v4 (needs 22) must be skipped, v2/v3/sync/async/v1 remain
+    res = tune.search(4096, hw, repro.CholeskyConfig(
+        tb=0, policy="auto", cache_slots=8))
+    pols = {c.config.policy for c in res.candidates}
+    assert "v4" not in pols and {"v2", "v3"} <= pols
+    assert all(c.config.cache_slots == 8 for c in res.candidates)
+    # a custom v4 block with policy="auto" searches too (non-v4
+    # candidates shed the block instead of failing validation)
+    res = tune.search(4096, hw, repro.CholeskyConfig(
+        tb=0, policy="auto", cache_slots=30, block=(2, 3)))
+    assert any(c.config.policy != "v4" for c in res.candidates)
+    for c in res.candidates:
+        assert c.config.block == ((2, 3) if c.config.policy == "v4"
+                                  else (4, 4))
+
+
+def test_plan_auto_cache_tracks_default_hardware():
+    """Regression: the auto-key plan cache used to mask
+    set_default_hardware() — plan() returned the plan tuned for the
+    previous model."""
+    import dataclasses
+    n = 2048
+    auto = repro.CholeskyConfig(tb=0, policy="auto")
+    p1 = repro.plan(n, auto)
+    # 8 MB of device memory cannot hold p1's tile size at any policy
+    # minimum: the winner must change under the new default model
+    tiny = dataclasses.replace(HW["gh200"], mem_bytes=8e6, name="tiny-mem")
+    tune.set_default_hardware(tiny)
+    p2 = repro.plan(n, auto)
+    assert p2 is not p1 and p2.config != p1.config
+    assert p2.config == tune.resolve_config(n, auto)
+    assert p2.config.tb * p2.config.tb * 8 * p2.config.cache_slots <= 8e6
+    # a config-side hw pin is unaffected by the process default
+    pinned = repro.CholeskyConfig(tb=0, policy="auto", hw="a100-pcie")
+    p3 = repro.plan(n, pinned)
+    tune.set_default_hardware(None)
+    assert repro.plan(n, pinned) is p3
+
+
+def test_db_hit_respects_pinned_block(tmp_path):
+    """Regression: _matches_pins ignored the v4 block, so a db hit could
+    hand back a winner violating the requested update block."""
+    db = tune.TuningDB(str(tmp_path / "db.json"))
+    n = 2048
+    c44 = tune.resolve_config(
+        n, repro.CholeskyConfig(tb=0, policy="v4", hw="gh200"), db=db)
+    assert c44.block == (4, 4)
+    c23 = tune.resolve_config(
+        n, repro.CholeskyConfig(tb=0, policy="v4", block=(2, 3),
+                                hw="gh200"), db=db)
+    assert c23.block == (2, 3)
+
+
+def test_memory_cap_forces_small_footprint():
+    """Shrinking mem_bytes must shrink every candidate's footprint (the
+    OOC constraint the paper sweeps by hand across platforms)."""
+    import dataclasses
+    hw = HW["a100-pcie"]
+    tiny = dataclasses.replace(hw, mem_bytes=2e9)
+    n = 1 << 13
+    for cand in tune.search(n, tiny).candidates:
+        assert cand.footprint_bytes <= tiny.mem_bytes
+
+
+def test_mxp_dimension_with_sample_matrix():
+    """eps_target + sample adds the precision dimension: the winner at a
+    loose eps on a strongly-diagonal matrix should move fewer bytes than
+    the f64 winner."""
+    n = 1024
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal((n, n)) / np.sqrt(n)
+    a = b @ b.T * 1e-7 + np.diag(1.0 + np.abs(rng.standard_normal(n)))
+    hw = HW["gh200"]
+    cfg = repro.CholeskyConfig(tb=n // 8, policy="auto")
+    f64 = tune.search(n, hw, cfg)
+    mxp = tune.tune(n, cfg, hw=hw, sample=a, eps_target=1e-5, use_db=False)
+    assert mxp.best.config.plan is not None
+    assert mxp.best.loads_bytes < f64.best.loads_bytes
+    # the tuned MxP config is directly plannable and factors correctly
+    l = repro.plan(n, mxp.best.config).compile().factor(a)
+    assert np.abs(l @ l.T - a).max() / np.abs(a).max() < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# db persistence
+
+def test_db_round_trip(tmp_path):
+    path = str(tmp_path / "tune.json")
+    db = tune.TuningDB(path)
+    plan = repro.uniform_plan(8, "f32")
+    cfg = repro.CholeskyConfig(tb=128, policy="v4", cache_slots=30,
+                               block=(4, 4), plan=plan, hw="gh200")
+    db.put("fp123", 1024, 1, 1e-6, cfg, predicted_makespan=1.25,
+           hw_name="gh200", hw_source="datasheet")
+    # a fresh handle reads the same config back, by value
+    db2 = tune.TuningDB(path)
+    got = db2.get("fp123", 1024, 1, 1e-6)
+    assert got == cfg
+    assert got.plan == plan
+    rec = db2.get_record("fp123", 1024, 1, 1e-6)
+    assert rec["predicted_makespan_s"] == 1.25
+    # key misses: different fingerprint / n / ndev / eps
+    assert db2.get("other", 1024, 1, 1e-6) is None
+    assert db2.get("fp123", 2048, 1, 1e-6) is None
+    assert db2.get("fp123", 1024, 2, 1e-6) is None
+    assert db2.get("fp123", 1024, 1, None) is None
+    # the file is plain JSON (the contract: diffable, hand-editable)
+    blob = json.loads(open(path).read())
+    assert blob["schema"] == 1 and len(blob["records"]) == 1
+
+
+def test_db_in_memory_mode():
+    db = tune.TuningDB(None)
+    cfg = repro.CholeskyConfig(tb=64, policy="v3")
+    db.put("fp", 512, 1, None, cfg, 0.5)
+    assert db.get("fp", 512, 1, None) == cfg
+    assert db.path is None
+
+
+def test_db_corrupt_file_degrades_to_empty(tmp_path):
+    path = str(tmp_path / "tune.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert len(tune.TuningDB(path)) == 0
+
+
+# ---------------------------------------------------------------------------
+# planner integration: plan(n, auto-config)
+
+def test_plan_resolves_auto_config():
+    cfg = repro.CholeskyConfig(tb=0, policy="auto", hw="a100-pcie")
+    pl = repro.plan(2048, cfg)
+    c = pl.config
+    assert not c.needs_tuning
+    assert 2048 % c.tb == 0
+    assert c.policy in ("sync", "async", "v1", "v2", "v3", "v4")
+    assert tune.is_feasible(2048, c, HW["a100-pcie"])
+    # repeat plan() with the same auto config: same cached plan object
+    assert repro.plan(2048, cfg) is pl
+    # the resolved concrete config keys the same plan too
+    assert repro.plan(2048, c) is pl
+
+
+def test_plan_auto_resolution_is_deterministic_and_solves():
+    n = 512
+    before = api.schedule_build_count()
+    solver = repro.plan(n, repro.CholeskyConfig(tb=0, policy="auto")).compile()
+    a = repro.random_spd(n, seed=3)
+    l = solver.factor(a)
+    assert np.abs(l - np.linalg.cholesky(a)).max() < 1e-10
+    api.clear_plan_cache()
+    tune.clear_tuning_cache()
+    cfg2 = repro.plan(n, repro.CholeskyConfig(tb=0, policy="auto")).config
+    assert cfg2 == solver.config       # same winner after a full reset
+    assert api.schedule_build_count() - before >= 1
+
+
+def test_plan_auto_respects_pinned_policy():
+    pl = repro.plan(1024, repro.CholeskyConfig(tb=0, policy="v1"))
+    assert pl.config.policy == "v1" and pl.config.tb > 0
+
+
+def test_resolve_config_uses_db_and_pins(tmp_path):
+    db = tune.TuningDB(str(tmp_path / "db.json"))
+    auto = repro.CholeskyConfig(tb=0, policy="auto", hw="gh200")
+    c1 = tune.resolve_config(1024, auto, db=db)
+    assert len(db) == 1
+    # db hit: no new record, same config
+    assert tune.resolve_config(1024, auto, db=db) == c1
+    assert len(db) == 1
+    # a pinned request the cached winner violates re-searches
+    pinned = repro.CholeskyConfig(tb=0, policy="sync", hw="gh200")
+    c2 = tune.resolve_config(1024, pinned, db=db)
+    assert c2.policy == "sync"
+
+
+def test_set_default_hardware_changes_resolution():
+    import dataclasses
+    n = 1024
+    # a model with absurd launch overhead punishes small tiles hard
+    slow = dataclasses.replace(HW["gh200"], launch_overhead=5e-2,
+                               name="slow-launch")
+    fast_cfg = tune.resolve_config(n, repro.CholeskyConfig(
+        tb=0, policy="auto"))
+    tune.set_default_hardware(slow)
+    slow_cfg = tune.resolve_config(n, repro.CholeskyConfig(
+        tb=0, policy="auto"))
+    assert slow_cfg.tb >= fast_cfg.tb
+    assert slow_cfg.tb == n // 2       # fewest ops the search allows
+
+
+def test_specialize_on_open_tb_raises():
+    cfg = repro.CholeskyConfig(tb=0, policy="auto", eps_target=1e-6)
+    with pytest.raises(ValueError, match="tb"):
+        cfg.specialize(repro.random_spd(256, seed=0))
+
+
+# ---------------------------------------------------------------------------
+# eager config validation (mem cap + slot minimums)
+
+def test_config_mem_cap_validation():
+    # 2000 slots of 4096^2 f64 tiles = 268 GB > gh200's 96 GB
+    with pytest.raises(ValueError, match="mem_bytes"):
+        repro.CholeskyConfig(tb=4096, policy="v3", cache_slots=2000,
+                             hw="gh200")
+    # same budget is fine without a device bound declared
+    repro.CholeskyConfig(tb=4096, policy="v3", cache_slots=2000)
+    with pytest.raises(ValueError, match="unknown hw"):
+        repro.CholeskyConfig(tb=64, hw="dgx-9000")
+
+
+@pytest.mark.parametrize("policy, bad", [
+    ("v3", 3), ("v2", 2), ("v1", 3), ("sync", 2), ("async", 1),
+])
+def test_config_slot_minimum_validation(policy, bad):
+    """An unbuildable slot budget now fails at config construction, not
+    as a cache-thrash RuntimeError deep inside schedule building."""
+    with pytest.raises(ValueError, match="cache slots"):
+        repro.CholeskyConfig(tb=64, policy=policy, cache_slots=bad)
+    repro.CholeskyConfig(tb=64, policy=policy,
+                         cache_slots=min_cache_slots(policy))
+
+
+# ---------------------------------------------------------------------------
+# calibration (live CPU backend)
+
+def test_calibrate_end_to_end_and_drives_search():
+    model = tune.calibrate(tb=32, repeats=1, transfer_sizes_mb=(1,))
+    assert model.source == "measured"
+    assert model.fingerprint == tune.hardware_fingerprint()
+    assert model.mem_bytes > 0
+    assert model.h2d_bw > 0 and model.d2h_bw > 0
+    assert model.launch_overhead > 0
+    for task in ("potrf", "trsm", "syrk", "gemm"):
+        for cls in ("f64", "f32", "bf16", "f8e4m3"):
+            assert model.kernel_flops[task][cls] > 0, (task, cls)
+    assert set(model.flops) >= {"f64", "f32", "bf16", "f8e4m3"}
+    # the measured model drives the same search path as the presets
+    res = tune.tune(4096, hw=model, use_db=False)
+    assert tune.is_feasible(4096, res.config, model)
+    assert res.hw.source == "measured"
+    # and round-trips through its JSON form
+    clone = tune.model_from_dict(tune.model_to_dict(model))
+    assert clone == model
+
+
+def test_task_rate_falls_back_to_class_peak():
+    hw = HW["gh200"]
+    assert hw.task_rate("gemm", "f64") == hw.flops["f64"]
+    measured = HardwareModel(
+        "m", {"f64": 1e12}, 1e9, 1e9, 0.0,
+        kernel_flops={"gemm": {"f64": 2e12}})
+    assert measured.task_rate("gemm", "f64") == 2e12
+    assert measured.task_rate("potrf", "f64") == 1e12   # not measured
+
+
+# ---------------------------------------------------------------------------
+# chrome trace export
+
+def test_chrome_trace_single_and_multi(tmp_path):
+    hw = HW["gh200"]
+    r = repro.plan(256, tb=64, policy="v3").simulate(
+        hw, record_timeline=True)
+    path = tmp_path / "t.json"
+    trace = chrome_trace(r, path)
+    blob = json.loads(path.read_text())
+    assert blob["traceEvents"] == trace["traceEvents"]
+    spans = [e for e in blob["traceEvents"] if e["ph"] == "X"]
+    meta = [e for e in blob["traceEvents"] if e["ph"] == "M"]
+    assert len(spans) == len(r.timeline)
+    assert {m["args"]["name"] for m in meta} == {"h2d", "cmp", "d2h"}
+    for e in spans:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+        assert e["ts"] + e["dur"] <= r.makespan * 1e6 * (1 + 1e-9)
+    # multi-device timelines carry per-device engines + the shared link
+    rm = repro.plan(256, tb=64, policy="v3", ndev=2).simulate(
+        hw, record_timeline=True)
+    tm = chrome_trace(rm)
+    names = {e["args"]["name"] for e in tm["traceEvents"]
+             if e["ph"] == "M"}
+    assert "link" in names and "d0:cmp" in names and "d1:cmp" in names
+    # timeline not recorded -> actionable error
+    with pytest.raises(ValueError, match="record_timeline"):
+        chrome_trace(repro.plan(256, tb=64, policy="v3").simulate(hw))
