@@ -22,6 +22,8 @@ jax.config.update("jax_enable_x64", True)
 import repro
 from repro import tune
 
+HW_A100 = repro.HW["a100-pcie"]
+
 
 def main():
     n = 2048
@@ -73,8 +75,6 @@ def main():
         tb=0, policy="auto"))
     assert resolved == mc
 
-
-HW_A100 = repro.HW["a100-pcie"]
 
 if __name__ == "__main__":
     main()

@@ -52,8 +52,8 @@ def main():
     print(ascii_trace(plans["sync"].simulate(HW["gh200"],
                                              record_timeline=True)))
 
-    print("\n--- multi-device V3 (1D block-cyclic, Fig. 5/9) ---")
-    print(f"{'ndev':>4s} {'per-dev C2G GB':>15s} {'bcast GB':>9s} "
+    print("\n--- multi-device V3 (block-cyclic, Fig. 5/9; docs/multidevice.md) ---")
+    print(f"{'ndev':>4s} {'grid':>6s} {'per-dev C2G GB':>15s} {'bcast GB':>9s} "
           f"{'gh200 eff':>10s} {'a100 eff':>9s}")
     def efficiency(pl, hw_name):
         r = pl.simulate(HW[hw_name])
@@ -63,15 +63,18 @@ def main():
             return r.compute_efficiency
         return r.compute_busy / r.makespan
 
-    for ndev in (1, 2, 4):
-        pl = repro.plan(N, tb=TB, policy="v3", ndev=ndev)
+    # 2D block-cyclic grids shrink the broadcast itself: the (2, 2) grid
+    # at 4 devices moves ~sqrt(P) less than the 1D tile-row layout
+    for ndev, grid in ((1, None), (2, None), (4, None), (4, (2, 2))):
+        pl = repro.plan(N, tb=TB, policy="v3", ndev=ndev, grid=grid)
         rep = pl.volume()
         if ndev > 1:
             per_dev, bcast = rep["per_device"][0]["c2g_bytes"], rep["bcast_bytes"]
         else:
             per_dev, bcast = rep["c2g_bytes"], 0
         effs = {hw: efficiency(pl, hw) for hw in ("gh200", "a100-pcie")}
-        print(f"{ndev:4d} {per_dev/1e9:15.2f} "
+        glabel = "x".join(map(str, grid)) if grid else f"{ndev}x1"
+        print(f"{ndev:4d} {glabel:>6s} {per_dev/1e9:15.2f} "
               f"{bcast/1e9:9.2f} {effs['gh200']*100:9.1f}% "
               f"{effs['a100-pcie']*100:8.1f}%")
 

@@ -21,6 +21,14 @@ Autotuning (0.4): leave dimensions open and the planner resolves them —
 ``repro.plan(n, CholeskyConfig(tb=0, policy="auto", hw="gh200"))`` picks
 tile size, policy, and cache budget by exact-simulation search; see
 :mod:`repro.tune` for hardware calibration and explicit campaigns.
+
+Multi-device (0.5): ``CholeskyConfig(ndev=4)`` runs one static op
+stream per device — 1D tile-row ownership by default, or a 2D
+block-cyclic grid (``grid=(2, 2)``) whose scoped broadcasts cut the
+interconnect volume to O(sqrt(P)); the tuner searches the grid shape
+when it is left open.  The ``docs/`` tree (architecture,
+schedule-format, multidevice, tuning) is the narrative documentation;
+its code blocks are executed by CI.
 """
 from repro.core.analytics import (HW, HardwareModel, ascii_trace,
                                   chrome_trace, crosscheck_executed_volume,
@@ -38,7 +46,7 @@ from repro.core.schedule import (MultiDeviceSchedule, Op, OpKind, Schedule,
 from repro.core.tiling import TileLayout, from_tiles, random_spd, to_tiles
 from repro import tune
 
-__version__ = "0.4.0"
+__version__ = "0.5.0"
 
 __all__ = [
     "__version__",

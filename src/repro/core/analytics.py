@@ -10,10 +10,12 @@ dependencies encoded in the slot indices.
 
 :func:`simulate_multi` extends the same model to the multi-device op
 streams of :func:`~repro.core.schedule.build_multidevice_schedule`: every
-device gets its own H2D/D2H/compute engine triple, and the per-column
-panel-row broadcast (BCAST/RECV pairs) rides one *shared* interconnect
-engine whose bandwidth defaults to the preset's link speed — this is what
-separates the PCIe-switch platforms from NVLink-C2C in Fig. 9.
+device gets its own H2D/D2H/compute engine triple, and the broadcasts
+(the column-scoped panel BCAST/RECV pairs plus, for 2D device grids, the
+row-scoped ownership broadcasts) ride one *shared* interconnect engine.
+Its bandwidth defaults to the model's measured ``link_bw`` when one is
+recorded (calibrated models), else the preset's host-link speed — this
+is what separates the PCIe-switch platforms from NVLink-C2C in Fig. 9.
 
 Hardware presets carry published peak numbers (``source="datasheet"``);
 :func:`repro.tune.calibrate` produces *measured* models from live-backend
@@ -40,6 +42,12 @@ class HardwareModel:
     alloc_overhead: float  # seconds per malloc/free pair (async policy)
     launch_overhead: float = 3e-6
     mem_bytes: float = 0.0   # device memory capacity (0 = unknown/unbounded)
+    # device-to-device interconnect bytes/s for the multi-device broadcast
+    # (0 = unknown: simulate_multi falls back to h2d_bw).  Presets leave it
+    # 0; repro.tune.calibrate() measures it whenever >= 2 devices are
+    # visible, so calibrated models drive simulate_multi with the real
+    # link speed by default.
+    link_bw: float = 0.0
     source: str = "datasheet"            # "datasheet" | "measured"
     fingerprint: str = ""    # hardware identity hash (tuning-db cache key)
     # optional per-kernel rates, FLOP/s: {"gemm": {"f64": r, ...}, ...}.
@@ -274,25 +282,38 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
     """Event simulation of the per-device op streams + shared interconnect.
 
     Every device runs the same three-engine model as :func:`simulate`
-    (its own H2D/D2H/compute engines, slot RAW/WAR tracking); the
-    panel-row broadcast rides one *shared* link engine of bandwidth
-    ``link_bw`` (default ``hw.h2d_bw``: PCIe-switch platforms share a slow
-    link, NVLink-C2C a fast one).  The broadcast is staged through the
-    owner's host-coherent copy, so each RECV waits for the owner's STORE
-    of that tile to have completed, then occupies the link for its own
-    ingress bytes — a P-1-copy collective on a shared medium.
+    (its own H2D/D2H/compute engines, slot RAW/WAR tracking); both
+    broadcast kinds — the column-scoped panel broadcast and, for 2D
+    grids, the row-scoped ownership broadcast — ride one *shared* link
+    engine of bandwidth ``link_bw``.  The default is the hardware
+    model's measured ``hw.link_bw`` when it has one (calibrated models,
+    see :func:`repro.tune.calibrate`), else ``hw.h2d_bw`` (PCIe-switch
+    platforms share a slow link, NVLink-C2C a fast one).  Broadcasts are
+    staged through the sender's host-coherent copy, so each RECV waits
+    until that copy exists (the sender's STORE, or the host-landing RECV
+    that delivered it to the sender), then occupies the link for its own
+    ingress bytes — a per-receiver-copy collective on a shared medium.
+    A host-landing RECV (``slot_c < 0``) updates the receiver's host-slab
+    coherence instead of a device slot: later LOADs of that tile on the
+    receiver wait for it.
 
-    Streams are replayed column-by-column, the column owner first, which
-    is exactly the partial order the BCAST/RECV edges impose.
+    Streams are replayed column-by-column in
+    :meth:`MultiDeviceSchedule.column_device_order`, which is exactly
+    the partial order the BCAST/RECV edges impose.
     """
     if link_bw is None:
-        link_bw = hw.h2d_bw
+        link_bw = hw.link_bw or hw.h2d_bw
     tb, lad, ndev = msched.tb, msched.plan.ladder, msched.ndev
     overlap = msched.policy != "sync"
 
     ready = [[0.0] * msched.stream_nslots(d) for d in range(ndev)]
     reads = [[0.0] * msched.stream_nslots(d) for d in range(ndev)]
-    host_ready = {}
+    # (i, j) -> time the tile's final value is available in device d's
+    # host slab (its own STOREs + host-landing RECVs); recv_host is the
+    # RECV-delivered subset, the only tiles whose LOAD must wait (a
+    # device's own STOREs keep the 1D model's engine-FIFO approximation)
+    host_avail = [{} for _ in range(ndev)]
+    recv_host = [{} for _ in range(ndev)]
     t_h2d = [0.0] * ndev
     t_d2h = [0.0] * ndev
     t_cmp = [0.0] * ndev
@@ -312,7 +333,8 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
         if op.kind is OpKind.LOAD:
             dur = op.bytes / hw.h2d_bw
             nbytes[d]["h2d"] += op.bytes
-            dep = max(reads[d][op.slot_c], ready[d][op.slot_c])
+            dep = max(reads[d][op.slot_c], ready[d][op.slot_c],
+                      recv_host[d].get((op.i, op.j), 0.0))
             if overlap:
                 start = max(t_h2d[d], dep)
                 t_h2d[d] = start + dur
@@ -338,16 +360,19 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
                 t_d2h[d] = end = t_cmp[d]
             busy[d]["d2h"] += dur
             reads[d][op.slot_c] = max(reads[d][op.slot_c], end)
-            host_ready[(op.i, op.j)] = end
+            host_avail[d][(op.i, op.j)] = end
             span(f"d{d}:d2h", start, end, f"S{op.i},{op.j}")
         elif op.kind is OpKind.BCAST:
-            pass    # availability tracked via host_ready; RECVs carry cost
+            pass    # availability tracked via host_avail; RECVs carry cost
         elif op.kind is OpKind.RECV:
             dur = op.bytes / link_bw
             nbytes[d]["recv"] += op.bytes
             link_bytes += op.bytes
-            dep = max(host_ready.get((op.i, op.j), 0.0),
-                      reads[d][op.slot_c], ready[d][op.slot_c])
+            # the sender's host-coherent copy must exist before the wire
+            dep = (host_avail[op.src].get((op.i, op.j), 0.0)
+                   if op.src >= 0 else 0.0)
+            if op.slot_c >= 0:      # panel-slot landing (WAR/WAW on slot)
+                dep = max(dep, reads[d][op.slot_c], ready[d][op.slot_c])
             if not overlap:
                 dep = max(dep, t_cmp[d])   # sync: one engine per device
             start = max(t_link, dep)
@@ -355,7 +380,11 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
             link_busy += dur
             if not overlap:
                 t_cmp[d] = t_link
-            ready[d][op.slot_c] = t_link
+            if op.slot_c >= 0:
+                ready[d][op.slot_c] = t_link
+            else:                   # host-landing: receiver slab coherence
+                host_avail[d][(op.i, op.j)] = t_link
+                recv_host[d][(op.i, op.j)] = t_link
             span("link", start, t_link, f"B{op.i},{op.j}->d{d}")
         else:  # compute
             flops = _TASK_FLOPS[op.kind](tb)
@@ -413,6 +442,7 @@ def volume_report_multi(msched: MultiDeviceSchedule) -> dict:
         "nt": msched.nt,
         "tb": msched.tb,
         "ndev": msched.ndev,
+        "grid": list(msched.grid),
         "c2g_bytes": msched.loads_bytes(),
         "g2c_bytes": msched.stores_bytes(),
         "bcast_bytes": msched.bcast_bytes(),

@@ -67,15 +67,30 @@ class CholeskyConfig:
 
     Hashable by value (including the optional :class:`PrecisionPlan`), so
     it can key the plan cache: equal configs share one schedule and one
-    compiled executor.
+    compiled executor.  Fields group into tiling (``tb``), schedule
+    policy (``policy``/``cache_slots``/``block``), precision
+    (``eps_target``/``ladder``/``plan``), distribution (``ndev``/
+    ``grid``), and execution (``backend``/``compute_dtype``/
+    ``use_pallas``); see docs/architecture.md for the subsystem map and
+    docs/schedule-format.md for what each knob does to the op stream.
+
+    Multi-device (``ndev > 1``): ``grid=(p, q)`` with ``p*q == ndev``
+    arranges the devices as a 2D block-cyclic grid (tile ``(i, j)`` is
+    owned by device ``(i%p)*q + (j%q)``), which scopes the panel
+    broadcast to ``p-1`` receivers and adds a ``q-1``-receiver ownership
+    broadcast — strictly less interconnect traffic than 1D for every
+    true 2D factorization.  ``grid=None`` means the 1D tile-row layout
+    ``(ndev, 1)``, except under the autotuner, which searches every
+    factorization of ``ndev`` (docs/multidevice.md).
 
     Open dimensions (0.4): ``tb=0`` and/or ``policy="auto"`` leave those
     axes to the autotuner — ``plan()`` resolves them through
     :func:`repro.tune.resolve_config` (exact-simulation search against
     the ``hw`` preset, the process default hardware, or the ``gh200``
     preset) before building the schedule.  With the tuner engaged,
-    ``cache_slots=0`` means "search slot budgets" instead of "builder
-    default".
+    ``cache_slots=0`` means "search slot budgets" and ``grid=None``
+    means "search grids" instead of the builder defaults
+    (docs/tuning.md).
     """
 
     tb: int                                   # tile size (0 = autotune)
@@ -88,7 +103,10 @@ class CholeskyConfig:
     compute_dtype: Any = None                 # jax backend compute dtype
     use_pallas: bool = False                  # Pallas tile kernels (jax)
     block: tuple = _DEFAULT_BLOCK             # v4 (h, w) update block
-    ndev: int = 1                             # 1D block-cyclic devices
+    ndev: int = 1                             # block-cyclic devices
+    grid: Optional[tuple] = None              # (p, q) device grid; None =
+                                              #   1D (ndev, 1), or searched
+                                              #   when the tuner is engaged
     hw: Optional[str] = None                  # analytics.HW preset name
 
     def __post_init__(self):
@@ -116,6 +134,17 @@ class CholeskyConfig:
                              f"default), got {self.cache_slots}")
         if self.ndev < 1:
             raise ValueError(f"ndev must be >= 1, got {self.ndev}")
+        if self.grid is not None:
+            object.__setattr__(self, "grid", tuple(self.grid))
+            if (len(self.grid) != 2
+                    or any(not isinstance(x, int) or x < 1
+                           for x in self.grid)):
+                raise ValueError(f"grid must be two positive ints (p, q), "
+                                 f"got {self.grid!r}")
+            if self.grid[0] * self.grid[1] != self.ndev:
+                raise ValueError(
+                    f"grid={self.grid} does not factor ndev={self.ndev} "
+                    f"(need p*q == ndev)")
         if (len(self.block) != 2
                 or any(not isinstance(x, int) or x < 1 for x in self.block)):
             raise ValueError(f"block must be two positive ints, "
@@ -226,9 +255,13 @@ class OOCSolver:
     Created via ``repro.plan(n, config).compile()``.  ``factor(a)``
     replays the cached schedule (the JAX executor lives on the shared
     plan and is jitted exactly once across every solver of that plan —
-    see ``stats``); ``solve(b)`` runs blocked forward/back substitution
-    against the factored tile store; ``simulate(hw)`` / ``volume()``
-    expose the analytics of the underlying plan.
+    see ``stats``); ``solve(b)``/``solve_lower(b)``/``logdet()`` run
+    blocked substitution against the factored tile store (pass
+    ``factor(a, materialize=False)`` to keep the factor tiled — the OOC
+    mode); ``simulate(hw)`` / ``volume()`` expose the analytics of the
+    underlying plan, and ``transfer_stats()`` the executed interconnect
+    counters of a multi-device jax ``factor()``.  The full walkthrough
+    lives in docs/architecture.md.
 
     Each ``compile()`` call returns a *fresh* solver: the expensive
     artifacts (schedule, jitted executor) are shared through the plan
@@ -472,6 +505,14 @@ def plan(n: int, config: CholeskyConfig | None = None,
     configs return the *same* plan object, whose ``compile()`` reuses one
     jitted executor — schedule construction and tracing are amortized
     across every factorization of that shape.
+
+    Configs with open dimensions (``tb=0``, ``policy="auto"``, and —
+    given ``ndev > 1`` — ``grid=None`` / ``cache_slots=0``) are resolved
+    through the autotuner first (:func:`repro.tune.resolve_config`,
+    docs/tuning.md); ``eps_target`` configs must be frozen with
+    :meth:`CholeskyConfig.specialize` before planning, because the
+    precision plan depends on the matrix values.  See
+    docs/architecture.md for the full planner/executor walkthrough.
     """
     global _SCHEDULE_BUILDS
     if config is None:
@@ -501,6 +542,11 @@ def plan(n: int, config: CholeskyConfig | None = None,
             _PLAN_CACHE.move_to_end(auto_key)
             return cached
         config = resolve_config(n, config)
+    if config.grid == (config.ndev, 1):
+        # an explicit 1D grid (e.g. a tuner winner) builds the identical
+        # schedule as grid=None: canonicalize so both key one cached plan
+        # and one jitted executor
+        config = dataclasses.replace(config, grid=None)
     layout = TileLayout(n, config.tb)   # validates n % tb == 0
     key = (n, config)
     cached = _PLAN_CACHE.get(key)
@@ -516,7 +562,7 @@ def plan(n: int, config: CholeskyConfig | None = None,
     if config.ndev > 1:
         msched = build_multidevice_schedule(
             layout.nt, config.tb, config.ndev, config.policy,
-            config.cache_slots, pplan)
+            config.cache_slots, pplan, grid=config.grid)
         single = None
     else:
         single = build_schedule(layout.nt, config.tb, config.policy,

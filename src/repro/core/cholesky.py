@@ -52,9 +52,9 @@ import jax
 import jax.numpy as jnp
 import ml_dtypes
 
-from .schedule import MultiDeviceSchedule, Op, OpKind, Schedule
+from .schedule import (MultiDeviceSchedule, Op, OpKind, Schedule,
+                       grid_owner)
 from .precision import PrecisionPlan, assign_precision, tile_norms, uniform_plan
-from .tiling import TileLayout
 
 _NP_DTYPES = {
     "f64": np.float64,
@@ -87,8 +87,13 @@ def _np_interpret_op(host: np.ndarray, slots: np.ndarray, op: Op,
     The single numerical semantics for both the single-device and the
     multi-device replay (a RECV is a LOAD whose bytes crossed the
     interconnect instead of the host link — the class round-trip is the
-    same; BCAST/ALLOC/FREE are bookkeeping-only)."""
+    same; BCAST/ALLOC/FREE are bookkeeping-only).  A host-landing RECV
+    (``slot_c < 0``, the 2D grid's row-scoped ownership broadcast) moves
+    a finalized tile between per-device host slabs; against the replay's
+    *shared* host store it is coherence bookkeeping with no effect."""
     if op.kind is OpKind.LOAD or op.kind is OpKind.RECV:
+        if op.slot_c < 0:
+            return
         slots[op.slot_c] = _np_round(host[op.i, op.j], lad[op.cls])
     elif op.kind is OpKind.STORE:
         rounded = _np_round(slots[op.slot_c], lad[op.cls])
@@ -246,26 +251,32 @@ class MultiDeviceJaxExecutor:
 
     Each device stream is compiled as a sequence of *column segments* —
     unrolled jitted programs (same op semantics and kernel fns as the
-    single-device executor) operating on that device's block-cyclic row
-    slab ``[ceil(Nt/ndev), Nt, tb, tb]`` and its private slot buffer.  The
+    single-device executor) operating on that device's block-cyclic host
+    row slab and its private slot buffer.  The slab holds the tile rows
+    of the device's *grid row* (``[ceil(Nt/p), Nt, tb, tb]``; with the 1D
+    default grid ``(ndev, 1)`` each device has a private slab, a 2D grid
+    replicates each slab across its ``q`` grid-row peers).  The
     ``BCAST``/``RECV`` cross-stream edges are the only points where data
-    leaves a device: the owner's segment returns the finalized panel-row
-    tiles rounded to their class (wire) dtype, and :func:`jax.device_put`
-    moves each tile to every peer, where the next segment writes it into
-    the dedicated panel slot (``panel_base + n``) its column-``k`` GEMM /
-    TRSM ops read.  Per column ``k`` the dispatch order is::
+    leaves a device: a segment returns the tiles its BCAST ops publish,
+    rounded to their class (wire) dtype, and :func:`jax.device_put`
+    moves each tile to its receivers, where the consuming segment writes
+    it into the dedicated panel slot (``panel_base + n``) — or, for the
+    2D grid's row-scoped ownership broadcast (``slot_c < 0``), directly
+    into the receiver's host slab at ``(m, k)``.  Per column ``k`` the
+    dispatch order is :meth:`MultiDeviceSchedule.column_device_order`,
+    with the diagonal owner's stream split at its last panel BCAST::
 
         owner head (diag update + POTRF + panel-row wire tiles)
-          -> device_put to each peer              (the BCAST/RECV edges)
+          -> device_put to each grid-column peer  (the BCAST/RECV edges)
           -> owner tail (its own rows of column k)  |  concurrently
-          -> each peer's segment (RECV + its rows)  |  (async dispatch)
+          -> each worker's segment (RECV + rows)    |  (async dispatch)
+          -> row-scoped receivers (host-slab RECVs of finalized tiles)
 
     so the owner's trailing update overlaps the peers' broadcasts and
-    updates exactly as in the static schedule's partial order
-    (:meth:`MultiDeviceSchedule.iter_column_order`).
+    updates exactly as in the static schedule's partial order.
 
     Numerics are op-for-op those of :func:`run_multidevice_numpy`: a RECV
-    observes the owner's host-coherent tile rounded through its class, so
+    observes the sender's host-coherent tile rounded through its class, so
     FP64 plans agree with the NumPy replay to BLAS round-off and MxP plans
     perform the identical rounding events.
 
@@ -298,13 +309,12 @@ class MultiDeviceJaxExecutor:
         self.jit_traces = 0
         self.last_transfer_stats = None
         self._kf = _make_kernel_fns(use_pallas, interpret)
-        # ownership comes from the same TileLayout rule the schedule
-        # builder and iter_column_order use; row slab d holds the global
-        # rows it owns, in order, and _local_row inverts that mapping
-        self._layout = TileLayout(msched.nt * msched.tb, msched.tb)
+        # device d's host slab holds the rows of its grid row (d // q);
+        # tile-level ownership within the slab follows schedule.grid_owner,
+        # the same rule the builder and column_device_order use
+        p, q = msched.grid
         self._rows = [
-            [i for i in range(msched.nt)
-             if self._layout.owner(i, msched.ndev) == d]
+            [i for i in range(msched.nt) if i % p == d // q]
             for d in range(msched.ndev)
         ]
         self._local_row = [
@@ -317,8 +327,9 @@ class MultiDeviceJaxExecutor:
         """Jit one device-column slice of device ``d``'s stream.
 
         ``seg(host_slab, slots, recv_tiles) -> (host_slab, slots, wires)``
-        where ``recv_tiles`` match the slice's RECV ops in order and
-        ``wires`` are the class-dtype panel tiles its BCAST ops publish.
+        where ``recv_tiles`` match the slice's RECV ops in order (panel
+        RECVs land in their slot, host-landing RECVs in the slab) and
+        ``wires`` are the class-dtype tiles its BCAST ops publish.
         """
         msched = self.msched
         lad, cdt = msched.plan.ladder, self.compute_dtype
@@ -331,7 +342,10 @@ class MultiDeviceJaxExecutor:
         def seg(host, slots, recv_tiles):
             self.jit_traces += 1        # body runs only while tracing
             for o, t in zip(recv_ops, recv_tiles):
-                slots = slots.at[o.slot_c].set(t.astype(cdt))
+                if o.slot_c >= 0:
+                    slots = slots.at[o.slot_c].set(t.astype(cdt))
+                else:
+                    host = host.at[lrow(o.i), o.j].set(t.astype(cdt))
             for o in body:
                 host, slots = _jx_interpret_op(host, slots, o, lad,
                                                self._kf, cdt, lrow)
@@ -345,17 +359,20 @@ class MultiDeviceJaxExecutor:
     def _build_columns(self):
         """Group each stream by column step and compile the segments.
 
-        Per column: the owner's ops split at its last BCAST into a *head*
-        (diagonal work + published wire tiles) and a *tail* (its own rows),
-        so peers can start as soon as the panel row is on the wire while
-        the owner's trailing update keeps running.
+        Per column the segments run in
+        :meth:`MultiDeviceSchedule.column_device_order`; the diagonal
+        owner's ops split at its last *panel* BCAST into a head (diagonal
+        work + published panel wires) and a tail (its own rows), so the
+        grid-column peers can start as soon as the panel row is on the
+        wire while the owner's trailing update keeps running.  Each
+        column also records how many receivers every published wire has
+        (the executed-bcast-bytes accounting for scoped broadcasts).
         """
         msched = self.msched
         nt, ndev = msched.nt, msched.ndev
         ptr = [0] * ndev
         columns = []
         for k in range(nt):
-            ow = self._layout.owner(k, ndev)
             per_dev = []
             for d in range(ndev):
                 stream = msched.streams[d]
@@ -363,19 +380,28 @@ class MultiDeviceJaxExecutor:
                 while ptr[d] < len(stream) and stream[ptr[d]].k == k:
                     ptr[d] += 1
                 per_dev.append(stream[start:ptr[d]])
-            ow_ops = per_dev[ow]
-            split = max((i + 1 for i, o in enumerate(ow_ops)
-                         if o.kind is OpKind.BCAST), default=len(ow_ops))
-            head_fn, _, bcast_ops = self._make_segment(ow, ow_ops[:split])
-            tail = ow_ops[split:]
-            tail_fn = self._make_segment(ow, tail)[0] if tail else None
-            peers = []
-            for d in range(ndev):
-                if d == ow or not per_dev[d]:
+            nrecv = {}
+            for ops in per_dev:
+                for o in ops:
+                    if o.kind is OpKind.RECV:
+                        nrecv[(o.i, o.j)] = nrecv.get((o.i, o.j), 0) + 1
+            segs = []
+            order = msched.column_device_order(k)
+            dv = order[0]
+            for d in order:
+                ops = per_dev[d]
+                if not ops:
                     continue
-                fn, recv_ops, _ = self._make_segment(d, per_dev[d])
-                peers.append((d, fn, recv_ops))
-            columns.append((ow, head_fn, bcast_ops, tail_fn, peers))
+                if d == dv:
+                    split = max((i + 1 for i, o in enumerate(ops)
+                                 if o.kind is OpKind.BCAST and o.i == k),
+                                default=len(ops))
+                    segs.append((d,) + self._make_segment(d, ops[:split]))
+                    if ops[split:]:
+                        segs.append((d,) + self._make_segment(d, ops[split:]))
+                else:
+                    segs.append((d,) + self._make_segment(d, ops))
+            columns.append((segs, nrecv))
         assert all(ptr[d] == len(msched.streams[d]) for d in range(ndev))
         return columns
 
@@ -383,8 +409,7 @@ class MultiDeviceJaxExecutor:
     def __call__(self, host_tiles: np.ndarray) -> np.ndarray:
         """Factor the [Nt, Nt, tb, tb] host store; returns it in f64."""
         msched = self.msched
-        nt, tb, ndev, cdt = msched.nt, msched.tb, msched.ndev, \
-            self.compute_dtype
+        tb, ndev, cdt = msched.tb, msched.ndev, self.compute_dtype
         host_tiles = np.asarray(host_tiles, dtype=np.float64)
         row_slabs = self._rows
         host_d = [jax.device_put(jnp.asarray(host_tiles[rows], dtype=cdt),
@@ -398,26 +423,37 @@ class MultiDeviceJaxExecutor:
         ]
         stats = {"bcast_ops": 0, "recv_ops": 0,
                  "bcast_bytes": 0, "recv_bytes": 0}
-        for ow, head_fn, bcast_ops, tail_fn, peers in self._columns:
-            host_d[ow], slots_d[ow], wires = head_fn(host_d[ow],
-                                                     slots_d[ow], ())
-            wire_of = {(o.i, o.j): t for o, t in zip(bcast_ops, wires)}
-            stats["bcast_ops"] += len(bcast_ops)
-            stats["bcast_bytes"] += sum(t.nbytes * (ndev - 1) for t in wires)
-            if tail_fn is not None:       # overlaps the peers (async dispatch)
-                host_d[ow], slots_d[ow], _ = tail_fn(host_d[ow],
-                                                     slots_d[ow], ())
-            for d, fn, recv_ops in peers:
+        for segs, nrecv in self._columns:
+            wire_of = {}
+            for d, fn, recv_ops, bcast_ops in segs:
                 recv_tiles = tuple(
                     jax.device_put(wire_of[(o.i, o.j)], self.devices[d])
                     for o in recv_ops)
                 stats["recv_ops"] += len(recv_tiles)
                 stats["recv_bytes"] += sum(t.nbytes for t in recv_tiles)
-                host_d[d], slots_d[d], _ = fn(host_d[d], slots_d[d],
-                                              recv_tiles)
+                host_d[d], slots_d[d], wires = fn(host_d[d], slots_d[d],
+                                                  recv_tiles)
+                for o, t in zip(bcast_ops, wires):
+                    wire_of[(o.i, o.j)] = t
+                    stats["bcast_bytes"] += t.nbytes * nrecv[(o.i, o.j)]
+                stats["bcast_ops"] += len(bcast_ops)
         out = np.empty_like(host_tiles)
+        p, q = msched.grid
         for d, rows in enumerate(row_slabs):
+            if d % q:                   # grid-row peers hold replica slabs
+                continue
             out[rows] = np.asarray(host_d[d], dtype=np.float64)
+        if q > 1:
+            # slabs are replicated along grid rows and kept coherent by the
+            # row-scoped broadcast — except the diagonal tiles, which no
+            # later task consumes and which are therefore never shipped:
+            # read each one from its own diagonal owner
+            for k in range(msched.nt):
+                if k % q:
+                    dv = grid_owner(k, k, p, q)
+                    out[k, k] = np.asarray(
+                        host_d[dv][self._local_row[dv][k], k],
+                        dtype=np.float64)
         self.last_transfer_stats = stats
         return out
 

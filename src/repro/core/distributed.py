@@ -151,21 +151,47 @@ def panel_broadcast_bytes(nt: int, tb: int, p: int, word: int = 8) -> int:
     return total_tiles * tb * tb * word * (p - 1)
 
 
+def grid_broadcast_bytes(nt: int, tb: int, grid: tuple,
+                         word: int = 8) -> int:
+    """Analytic collective volume of the ``p x q`` 2D block-cyclic
+    schedule (uniform word-size tiles): at step ``k`` the panel row
+    ``(k, 0..k)`` goes to the ``p - 1`` other devices of grid column
+    ``k % q``, and each finalized column tile ``(m, k)``, ``m > k``,
+    goes to its ``q - 1`` grid-row peers.
+
+    ``grid=(P, 1)`` reduces to :func:`panel_broadcast_bytes`; for a true
+    2D factorization of ``P >= 2`` devices the total is strictly smaller
+    (roughly ``(p + q - 2) / (P - 1)`` of the 1D volume, the classic
+    O(sqrt(P)) communication scaling).  The static schedule reproduces
+    this number exactly:
+    ``build_multidevice_schedule(nt, tb, p*q, grid=grid).bcast_bytes()``.
+    """
+    p, q = grid
+    panel_tiles = sum(k + 1 for k in range(nt))          # column-scoped
+    column_tiles = sum(nt - 1 - k for k in range(nt))    # row-scoped
+    return tb * tb * word * ((p - 1) * panel_tiles
+                             + (q - 1) * column_tiles)
+
+
 def modeled_scaling(nt: int, tb: int, ndevs=(1, 2, 4), policy: str = "v3",
                     hw_name: str = "gh200",
-                    link_bw: float | None = None) -> list[dict]:
+                    link_bw: float | None = None,
+                    grid_of=None) -> list[dict]:
     """Fig. 9 scaling rows from the *same static schedules the executors
     replay* — an exact event simulation, not a side-channel estimate.
 
-    For each device count, builds the 1D block-cyclic multi-device
-    schedule, runs :func:`~repro.core.analytics.simulate_multi` on the
-    named hardware preset (``link_bw`` overrides the interconnect), and
-    reports makespan, speedup/efficiency vs the 1-device schedule, and
-    the broadcast volume."""
+    For each device count, builds the block-cyclic multi-device schedule
+    (1D tile-row ownership by default; ``grid_of`` maps a device count
+    to an explicit ``(p, q)`` grid, e.g. ``{4: (2, 2)}``), runs
+    :func:`~repro.core.analytics.simulate_multi` on the named hardware
+    preset (``link_bw`` overrides the interconnect), and reports
+    makespan, speedup/efficiency vs the 1-device schedule, and the
+    broadcast volume."""
     from .analytics import HW, simulate_multi
     from .schedule import build_multidevice_schedule
 
     hw = HW[hw_name]
+    grid_of = grid_of or {}
     m1 = build_multidevice_schedule(nt, tb, 1, policy)
     r1 = simulate_multi(m1, hw, link_bw=link_bw)
     t1 = r1.makespan
@@ -174,10 +200,12 @@ def modeled_scaling(nt: int, tb: int, ndevs=(1, 2, 4), policy: str = "v3",
         if p == 1:
             msched, r = m1, r1
         else:
-            msched = build_multidevice_schedule(nt, tb, p, policy)
+            msched = build_multidevice_schedule(nt, tb, p, policy,
+                                                grid=grid_of.get(p))
             r = simulate_multi(msched, hw, link_bw=link_bw)
         rows.append({
             "ndev": p,
+            "grid": list(msched.grid),
             "hw": hw_name,
             "policy": policy,
             "makespan": r.makespan,

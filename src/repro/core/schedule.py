@@ -25,19 +25,34 @@ Policies (paper §IV-A/B):
     that column block has consumed it.
 
 Multi-device (paper §IV-D, Fig. 5/9): :func:`build_multidevice_schedule`
-extends the same static trace to ``ndev`` devices with 1D block-cyclic
-ownership — tile-row ``i`` belongs to device ``i % ndev``
-(:meth:`TileLayout.owner`) — and emits *one op stream per device*, each
-with its own cache table.  The only inter-device communication is the
-per-column panel-row broadcast: after the owner of row ``k`` finalizes the
-diagonal tile, it emits one ``BCAST`` per row-``k`` tile ``(k, 0..k)`` and
-every other device emits a matching ``RECV`` into a dedicated panel slot.
-``BCAST`` carries the total egress bytes (tile bytes x (ndev-1) receivers,
-at the tile's class precision) and reads the owner's host-coherent copy
-(``slot_c = -1``); ``RECV`` carries one tile's ingress bytes and lands in
-the receiver's panel region, where the column-``k`` GEMM/TRSM ops consume
-it.  Each tile-row is broadcast exactly once per factorization, so the
+extends the same static trace to ``ndev`` devices arranged as a ``p x q``
+block-cyclic grid (``grid=(p, q)``, ``p*q == ndev``; the default
+``(ndev, 1)`` is the paper's 1D tile-row ownership) and emits *one op
+stream per device*, each with its own cache table.  Tile ``(i, j)``
+belongs to device ``(i % p) * q + (j % q)``
+(:meth:`TileLayout.owner_grid`); the column-``k`` tasks therefore all
+live on the ``p`` devices of grid column ``k % q``, and two scoped
+partial broadcasts are the only inter-device communication:
+
+* **column-scoped panel broadcast** — after the diagonal owner of step
+  ``k`` finalizes ``(k, k)``, it ships the panel row ``(k, 0..k)`` to the
+  ``p - 1`` other devices of grid column ``k % q`` (one ``BCAST`` per
+  tile on the owner stream, bytes = tile bytes x receivers; one ``RECV``
+  per receiver into its dedicated panel slot ``panel_base + n``);
+* **row-scoped ownership broadcast** (``q > 1`` only) — when a device
+  finalizes column tile ``(m, k)`` it ships it to the ``q - 1`` peers of
+  grid row ``m % p``, whose *host slabs* must stay coherent for the
+  later steps where they load ``(m, k)`` as a GEMM operand.  These
+  ``RECV`` ops land host-side (``slot_c = -1``), not in a device slot.
+
+With ``grid=(ndev, 1)`` the row-scoped broadcast is empty and the stream
+is op-for-op the 1D schedule of earlier releases: each tile-row is
+broadcast once per factorization to all ``ndev - 1`` peers and the
 collective volume matches ``distributed.panel_broadcast_bytes`` exactly.
+A 2D grid trades that for ``(p-1)`` panel receivers plus ``(q-1)``
+ownership receivers — ``distributed.grid_broadcast_bytes`` — which is
+strictly less for every true 2D factorization of ``ndev >= 2`` (the
+classic O(sqrt(P)) communication argument, Donfack et al. 2011).
 Everything else — operand loads, accumulator stores, cache decisions — is
 device-local and policy-identical to the single-device trace; with
 ``ndev=1`` no BCAST/RECV is emitted and the stream's byte volumes equal
@@ -50,7 +65,7 @@ import enum
 from typing import Optional
 
 from .precision import PrecisionPlan, BYTES, uniform_plan
-from .tiling import TileLayout
+from .tiling import grid_owner
 
 
 def min_cache_slots(policy: str, block: tuple = (4, 4)) -> int:
@@ -523,11 +538,15 @@ def _build_v4(nt: int, tb: int, plan: PrecisionPlan, cache_slots: int,
 
 @dataclasses.dataclass
 class MultiDeviceSchedule:
-    """One static op stream per device, 1D block-cyclic tile-row ownership.
+    """One static op stream per device, ``p x q`` block-cyclic ownership.
 
     Stream ``d`` contains every op device ``d`` executes, in order; the
-    only cross-stream edges are BCAST (owner) -> RECV (peers) pairs, which
-    carry the per-column panel-row broadcast.  ``hits``/``misses``/
+    only cross-stream edges are BCAST (sender) -> RECV (receivers) pairs:
+    the column-scoped panel broadcast (RECV into a panel slot) and, for
+    2D grids (``q > 1``), the row-scoped ownership broadcast of each
+    finalized column tile (RECV with ``slot_c = -1``, landing in the
+    receiver's host slab).  ``grid`` is the device grid ``(p, q)``
+    (``(ndev, 1)`` = the 1D tile-row layout).  ``hits``/``misses``/
     ``evictions`` are per-device cache-table counters (v2/v3 only).
 
     ``panel_base`` is the executor-facing slot contract: every slot id
@@ -557,6 +576,12 @@ class MultiDeviceSchedule:
     misses: list[int] = dataclasses.field(default_factory=list)
     evictions: list[int] = dataclasses.field(default_factory=list)
     panel_base: int = -1     # first panel slot id; -1 = no panel region
+    grid: tuple = ()         # (p, q) device grid; () normalizes to (ndev, 1)
+
+    def __post_init__(self):
+        if not self.grid:
+            self.grid = (self.ndev, 1)
+        self.grid = tuple(self.grid)
 
     @classmethod
     def from_single(cls, sched: Schedule) -> "MultiDeviceSchedule":
@@ -613,14 +638,19 @@ class MultiDeviceSchedule:
         For ``ndev > 1`` the hash also pins the executor-facing metadata
         (``panel_base`` and each stream's slot-buffer length): the JAX
         executor sizes and addresses device buffers from these, so a
-        change there is as execution-visible as a reordered op.  The
-        ndev=1 degenerate hashes ops only, keeping
-        ``from_single(s).digest()`` equal to the planner's digest.
+        change there is as execution-visible as a reordered op.  A
+        genuinely 2D grid (``q > 1``) is folded in too — it changes the
+        executor's host-slab layout; the 1D default ``(ndev, 1)`` is
+        left out so pre-grid digests stay valid.  The ndev=1 degenerate
+        hashes ops only, keeping ``from_single(s).digest()`` equal to
+        the planner's digest.
         """
         import hashlib
         h = hashlib.sha256()
         if self.ndev > 1:
             h.update(f"|panel{self.panel_base}|".encode())
+            if self.grid[1] > 1:
+                h.update(f"grid{self.grid[0]}x{self.grid[1]}|".encode())
         for d, stream in enumerate(self.streams):
             h.update(f"|dev{d}|".encode())
             if self.ndev > 1:
@@ -628,19 +658,29 @@ class MultiDeviceSchedule:
             _ops_digest_update(h, stream)
         return h.hexdigest()[:16]
 
-    def iter_column_order(self):
-        """Yield ``(device, op)`` column-by-column, the column owner first.
+    def column_device_order(self, k: int) -> list[int]:
+        """Device replay order for column step ``k``: the diagonal owner
+        first, then the grid-column workers, then the row-scoped
+        receivers.  This is exactly the partial order the BCAST->RECV
+        edges impose — a panel RECV must observe the owner's finalized
+        copy, and a row-scoped (host-landing) RECV must observe the
+        worker's final STORE of that tile."""
+        p, q = self.grid
+        dv = grid_owner(k, k, p, q)
+        workers = [grid_owner(r, k, p, q) for r in range(p)
+                   if grid_owner(r, k, p, q) != dv]
+        rest = [d for d in range(self.ndev)
+                if d != dv and d % q != k % q]
+        return [dv] + workers + rest
 
-        This is exactly the partial order the BCAST->RECV edges impose
-        (a RECV of a row-``k`` tile must observe the owner's finalized
-        copy), and the one order both replayers — the NumPy executor and
-        the event simulator — must share with the builder's ownership
-        rule."""
-        layout = TileLayout(self.nt * self.tb, self.tb)
+    def iter_column_order(self):
+        """Yield ``(device, op)`` column-by-column, in
+        :meth:`column_device_order` — the one order both replayers (the
+        NumPy executor and the event simulator) must share with the
+        builder's ownership rule."""
         ptr = [0] * self.ndev
         for k in range(self.nt):
-            ow = layout.owner(k, self.ndev)
-            for d in [ow] + [x for x in range(self.ndev) if x != ow]:
+            for d in self.column_device_order(k):
                 stream = self.streams[d]
                 while ptr[d] < len(stream) and stream[ptr[d]].k == k:
                     yield d, stream[ptr[d]]
@@ -655,18 +695,28 @@ def build_multidevice_schedule(
     policy: str = "v3",
     cache_slots: int = 0,
     plan: PrecisionPlan | None = None,
+    grid: tuple | None = None,
 ) -> MultiDeviceSchedule:
-    """Emit per-device op streams for the 1D block-cyclic tile Cholesky.
+    """Emit per-device op streams for the block-cyclic tile Cholesky.
 
-    Tile-row ``i`` is owned by device ``TileLayout.owner(i, ndev)`` =
-    ``i % ndev``.  At column step ``k`` the owner of row ``k`` updates and
-    factors the diagonal tile, broadcasts the finalized panel row
-    ``(k, 0..k)`` (BCAST on the owner stream, one RECV per peer into the
-    receiver's panel slot region), and every device then updates/factors
-    its own rows of column ``k`` locally under its own cache table.
+    ``grid=(p, q)`` (``p*q == ndev``; default ``(ndev, 1)``) arranges the
+    devices as a 2D block-cyclic grid: tile ``(i, j)`` is owned by device
+    ``TileLayout.owner_grid(i, j, grid)`` = ``(i % p) * q + (j % q)``.
+    At column step ``k`` the diagonal owner updates and factors
+    ``(k, k)``, ships the finalized panel row ``(k, 0..k)`` to the
+    ``p - 1`` other devices of grid column ``k % q`` (BCAST on the owner
+    stream, one RECV per receiver into its panel slot region), and each
+    grid-column device then updates/factors its own rows of column ``k``
+    locally under its own cache table.  For ``q > 1`` every finalized
+    column tile ``(m, k)`` is additionally shipped to the ``q - 1``
+    grid-row peers whose host slabs consume it in later steps (row-scoped
+    BCAST; host-landing RECV with ``slot_c = -1``).
 
-    With ``ndev=1`` the single stream is op-for-op identical to
-    :func:`build_schedule` for the same policy (no BCAST/RECV emitted).
+    With the default 1D grid this degenerates to the paper's tile-row
+    ownership (every device computes at every step, one full-ndev panel
+    broadcast per column); with ``ndev=1`` the single stream is
+    op-for-op identical to :func:`build_schedule` for the same policy
+    (no BCAST/RECV emitted).
     """
     policy = policy.lower()
     if policy not in ("sync", "v1", "v2", "v3"):
@@ -674,12 +724,20 @@ def build_multidevice_schedule(
             f"multi-device schedule supports sync/v1/v2/v3, got {policy!r}")
     if ndev < 1:
         raise ValueError(f"ndev must be >= 1, got {ndev}")
+    if grid is None:
+        grid = (ndev, 1)
+    grid = tuple(grid)
+    if (len(grid) != 2 or any(not isinstance(x, int) or x < 1 for x in grid)
+            or grid[0] * grid[1] != ndev):
+        raise ValueError(
+            f"grid must be two positive ints with p*q == ndev={ndev}, "
+            f"got {grid!r}")
+    p, q = grid
     if plan is None:
         plan = uniform_plan(nt)
     if plan.classes.shape[0] != nt:
         raise ValueError("precision plan Nt mismatch")
 
-    layout = TileLayout(nt * tb, tb)
     operand_cache = policy in ("v2", "v3")
     reuse_accum = policy in ("v1", "v2", "v3")
     pin_diag = policy == "v3"
@@ -709,18 +767,36 @@ def build_multidevice_schedule(
         return slot
 
     def broadcast_row(k, ow):
-        """Owner ships the finalized panel row (k, 0..k) to every peer."""
+        """Column-scoped panel broadcast: the diagonal owner ships the
+        finalized row (k, 0..k) to the other devices of grid column
+        ``k % q`` (all peers in the 1D degenerate)."""
+        receivers = [grid_owner(r, k, p, q) for r in range(p) if r != k % p]
+        if not receivers:
+            return
         for n in range(k + 1):
             cls, nb = tbytes(k, n)
             emits[ow](Op(OpKind.BCAST, i=k, j=n, cls=cls,
-                         bytes=nb * (ndev - 1), k=k, src=ow))
-            for d in range(ndev):
-                if d != ow:
-                    emits[d](Op(OpKind.RECV, i=k, j=n, slot_c=panel_base + n,
-                                cls=cls, bytes=nb, k=k, src=ow))
+                         bytes=nb * len(receivers), k=k, src=ow))
+            for d in receivers:
+                emits[d](Op(OpKind.RECV, i=k, j=n, slot_c=panel_base + n,
+                            cls=cls, bytes=nb, k=k, src=ow))
+
+    def broadcast_tile(k, m, d):
+        """Row-scoped ownership broadcast (q > 1 only): the finalizing
+        device ships tile (m, k) to its grid-row peers' host slabs, where
+        later steps load it as a GEMM operand."""
+        receivers = [grid_owner(m, c, p, q) for c in range(q) if c != k % q]
+        if not receivers:
+            return
+        cls, nb = tbytes(m, k)
+        emits[d](Op(OpKind.BCAST, i=m, j=k, cls=cls,
+                    bytes=nb * len(receivers), k=k, src=d))
+        for r in receivers:
+            emits[r](Op(OpKind.RECV, i=m, j=k, slot_c=-1,
+                        cls=cls, bytes=nb, k=k, src=d))
 
     for k in range(nt):
-        ow = layout.owner(k, ndev)
+        ow = grid_owner(k, k, p, q)   # diagonal owner of step k
 
         # --- 1) owner updates + factors the diagonal tile (device-local) ---
         if operand_cache:
@@ -755,14 +831,13 @@ def build_multidevice_schedule(
             emits[ow](Op(OpKind.POTRF, slot_c=c, k=k, cls=ccls((k, k))))
             store(ow, k, k, c, k)
 
-        # --- 2) panel-row broadcast (the only inter-device traffic) ---
-        if ndev > 1:
-            broadcast_row(k, ow)
+        # --- 2) panel-row broadcast (grid-column scoped) ---
+        broadcast_row(k, ow)
 
-        # --- 3) every device updates its own rows of column k ---
+        # --- 3) the grid-column devices update their rows of column k ---
         for m in range(k + 1, nt):
-            d = layout.owner(m, ndev)
-            local = d == ow     # row-k operands on-device vs panel region
+            d = grid_owner(m, k, p, q)
+            local = m % p == k % p   # row-k operands on-device vs panel
             if operand_cache:
                 cache = caches[d]
                 c = cache.load(m, k, k, pin=True)
@@ -813,12 +888,15 @@ def build_multidevice_schedule(
                             cls=ccls((k, k), (m, k))))
                 store(d, m, k, c, k)
 
+            # --- 4) row-scoped ownership broadcast of the finalized tile ---
+            broadcast_tile(k, m, d)
+
         if operand_cache and pin_diag:
             caches[ow].unpin(diag_slot)
 
     msched = MultiDeviceSchedule(streams, nt, tb, ndev, policy, cache_slots,
                                  plan, panel_base=panel_base if ndev > 1
-                                 else -1)
+                                 else -1, grid=grid)
     if operand_cache:
         msched.hits = [c.hits for c in caches]
         msched.misses = [c.misses for c in caches]

@@ -17,6 +17,20 @@ from typing import Iterator
 import numpy as np
 
 
+def grid_owner(i: int, j: int, p: int, q: int) -> int:
+    """Device id of tile ``(i, j)`` on a ``p x q`` block-cyclic grid —
+    the single ownership rule shared by the schedule builder, both
+    replay orders, and the multi-device executor::
+
+        grid_owner(i, j, p, q) == (i % p) * q + (j % q)
+
+    Devices are numbered row-major over the grid (device ``d`` sits at
+    grid position ``(d // q, d % q)``); ``q = 1`` degenerates to the 1D
+    tile-row rule ``i % p``.
+    """
+    return (i % p) * q + (j % q)
+
+
 @dataclasses.dataclass(frozen=True)
 class TileLayout:
     n: int          # matrix dimension
@@ -42,6 +56,25 @@ class TileLayout:
     def owner(self, i: int, num_workers: int) -> int:
         """1D block-cyclic owner of tile-row i (paper Fig. 1b / Fig. 5a)."""
         return i % num_workers
+
+    def owner_grid(self, i: int, j: int, grid: tuple) -> int:
+        """2D block-cyclic owner of tile (i, j) on a ``p x q`` device grid.
+
+        Devices are numbered row-major over the grid: device ``d`` sits at
+        grid position ``(d // q, d % q)`` and owns every tile whose row is
+        congruent to its grid row (mod p) and whose column is congruent to
+        its grid column (mod q)::
+
+            owner_grid(i, j, (p, q)) == (i % p) * q + (j % q)
+
+        ``grid=(P, 1)`` degenerates to the 1D tile-row ownership of
+        :meth:`owner` (each device owns whole rows), which is the paper's
+        multi-GPU layout; a genuinely 2D grid cuts the per-device panel
+        broadcast volume from O(P) to O(p + q) receivers per tile (see
+        docs/multidevice.md).
+        """
+        p, q = grid
+        return grid_owner(i, j, p, q)
 
 
 def to_tiles(a: np.ndarray, tb: int) -> np.ndarray:

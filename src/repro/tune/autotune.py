@@ -118,13 +118,16 @@ def tune(n: int,
     """Pick the schedule for this machine (or the given model) at size n.
 
     ``config`` pins any dimensions you have opinions about (see
-    :func:`repro.tune.search.search`); the default searches everything.
-    ``run_calibration=True`` measures the live backend first
-    (:func:`repro.tune.calibrate.calibrate`) and scores against the
-    measured model instead of a datasheet preset.  ``sample`` +
-    ``eps_target`` add the mixed-precision dimension: per-tb Higham-Mary
-    plans are computed from the sample's tile norms and scored exactly
-    like everything else.
+    :func:`repro.tune.search.search`); the default searches everything —
+    tile size, policy, slot budget, and (for ``ndev > 1``) the device
+    grid ``(p, q)``.  ``run_calibration=True`` measures the live backend
+    first (:func:`repro.tune.calibrate.calibrate`, including the
+    device-to-device ``link_bw`` the multi-device simulator rides) and
+    scores against the measured model instead of a datasheet preset.
+    ``sample`` + ``eps_target`` add the mixed-precision dimension:
+    per-tb Higham-Mary plans are computed from the sample's tile norms
+    and scored exactly like everything else.  docs/tuning.md is the
+    narrative version of this docstring.
 
     Returns the ranked result; ``result.config`` is ready for
     ``repro.plan(n, result.config)``.  Winners are memoized in ``db``
@@ -205,6 +208,10 @@ def _matches_pins(cached: CholeskyConfig, requested: CholeskyConfig,
             and cached.cache_slots != requested.cache_slots):
         return False
     if requested.ladder != cached.ladder or requested.ndev != cached.ndev:
+        return False
+    if requested.grid is not None and cached.grid != requested.grid:
+        # the grid is a searched dimension when open (None); a pinned
+        # request must get exactly its layout back
         return False
     if requested.block != cached.block:
         # a non-default block changes the v4 candidates the cached search

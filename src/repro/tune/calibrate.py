@@ -12,6 +12,9 @@ model transferable).  This module times, on the live JAX backend:
   * host<->device transfer bandwidth (``jax.device_put`` up, host
     ``np.asarray`` readback down) at several transfer sizes, keeping the
     steady-state large-transfer rate;
+  * device-to-device interconnect bandwidth (``link_bw``; measured when
+    >= 2 devices are visible) — the default the multi-device broadcast
+    model :func:`repro.core.analytics.simulate_multi` rides;
   * jit launch overhead and buffer-allocation overhead;
   * device memory capacity (``memory_stats()`` where the backend exposes
     it, a conservative fallback otherwise);
@@ -172,6 +175,25 @@ def _measure_bandwidth(sizes_mb, repeats: int) -> tuple[float, float]:
     return h2d, d2h
 
 
+def _measure_link_bandwidth(sizes_mb, repeats: int) -> float:
+    """Steady-state device-to-device bytes/s (``jax.device_put`` between
+    the first two visible devices) — the interconnect the multi-device
+    broadcasts ride.  Returns 0.0 when fewer than two devices are
+    visible (``simulate_multi`` then falls back to ``h2d_bw``)."""
+    import jax
+    devs = jax.devices()
+    if len(devs) < 2:
+        return 0.0
+    best = 0.0
+    for mb in sizes_mb:
+        nbytes = int(mb * 1e6)
+        x = jax.device_put(np.zeros(nbytes // 4, dtype=np.float32), devs[0])
+        x.block_until_ready()
+        dt = _best_seconds(lambda: jax.device_put(x, devs[1]), repeats)
+        best = max(best, nbytes / dt)
+    return best
+
+
 def _measure_overheads(repeats: int) -> tuple[float, float]:
     """(jit launch overhead, buffer alloc overhead) in seconds/event."""
     import jax
@@ -213,9 +235,12 @@ def calibrate(tb: int = 256,
     The result plugs into everything the datasheet presets do —
     ``simulate``/``simulate_multi``, the tuner's candidate search — but
     with per-kernel, per-class rates measured through the executor's own
-    kernel fns, real link bandwidth, and the device's actual memory
-    capacity (``mem_bytes`` overrides detection, e.g. to model a smaller
-    slot budget than the hardware has).
+    kernel fns, real host-link *and* (whenever at least two devices are
+    visible) device-to-device interconnect bandwidth — ``link_bw``,
+    which ``simulate_multi`` then uses by default for the multi-device
+    broadcasts — and the device's actual memory capacity (``mem_bytes``
+    overrides detection, e.g. to model a smaller slot budget than the
+    hardware has).
     """
     import jax
     classes = tuple(classes) if classes is not None else _ALL_CLASSES
@@ -225,6 +250,7 @@ def calibrate(tb: int = 256,
                              f"expected a subset of {_ALL_CLASSES}")
     kernel_flops = _measure_kernels(tb, classes, repeats)
     h2d_bw, d2h_bw = _measure_bandwidth(transfer_sizes_mb, repeats)
+    link_bw = _measure_link_bandwidth(transfer_sizes_mb, repeats)
     launch, alloc = _measure_overheads(repeats)
     fp = hardware_fingerprint()
     dev = jax.devices()[0]
@@ -238,6 +264,7 @@ def calibrate(tb: int = 256,
         flops={c: kernel_flops["gemm"][c] for c in classes},
         h2d_bw=h2d_bw,
         d2h_bw=d2h_bw,
+        link_bw=link_bw,
         alloc_overhead=alloc,
         launch_overhead=launch,
         mem_bytes=float(mem_bytes) if mem_bytes else _device_mem_bytes(),

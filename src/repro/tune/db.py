@@ -44,6 +44,8 @@ def config_to_dict(config: CholeskyConfig) -> dict:
     :func:`config_from_dict`)."""
     d = dataclasses.asdict(config)
     d["block"] = list(config.block)
+    if config.grid is not None:
+        d["grid"] = list(config.grid)
     if config.plan is not None:
         d["plan"] = {
             "classes": config.plan.classes.tolist(),
@@ -58,6 +60,8 @@ def config_to_dict(config: CholeskyConfig) -> dict:
 def config_from_dict(d: dict) -> CholeskyConfig:
     d = dict(d)
     d["block"] = tuple(d.get("block", (4, 4)))
+    if d.get("grid") is not None:
+        d["grid"] = tuple(d["grid"])
     if d.get("plan") is not None:
         p = d["plan"]
         d["plan"] = PrecisionPlan(

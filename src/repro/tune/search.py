@@ -58,7 +58,9 @@ class Candidate:
         c = self.config
         return {
             "tb": c.tb, "policy": c.policy, "cache_slots": c.cache_slots,
-            "ndev": c.ndev, "makespan_s": self.makespan,
+            "ndev": c.ndev,
+            "grid": list(c.grid) if c.grid else [c.ndev, 1],
+            "makespan_s": self.makespan,
             "tflops": self.tflops, "loads_bytes": self.loads_bytes,
             "stores_bytes": self.stores_bytes,
             "link_bytes": self.link_bytes,
@@ -142,11 +144,12 @@ def is_feasible(n: int, config: CholeskyConfig, hw: HardwareModel) -> bool:
     return config.cache_slots <= hw.max_cache_slots(config.tb, reserve)
 
 
-def _score(n, tb, policy, slots, pplan, ndev, hw, base: CholeskyConfig):
+def _score(n, tb, policy, slots, pplan, ndev, hw, base: CholeskyConfig,
+           grid=None):
     nt = n // tb
     if ndev > 1:
         msched = build_multidevice_schedule(nt, tb, ndev, policy, slots,
-                                            pplan)
+                                            pplan, grid=grid)
         r = simulate_multi(msched, hw)
         loads, stores = msched.loads_bytes(), msched.stores_bytes()
         link = r.link_bytes
@@ -160,6 +163,7 @@ def _score(n, tb, policy, slots, pplan, ndev, hw, base: CholeskyConfig):
         nslots = slots
     cfg = dataclasses.replace(
         base, tb=tb, policy=policy, cache_slots=slots, ndev=ndev,
+        grid=grid if ndev > 1 else None,
         # a custom v4 block must not ride along into non-v4 candidates
         block=base.block if policy == "v4" else _DEFAULT_BLOCK,
         plan=pplan if pplan is not None and not _is_uniform_f64(pplan)
@@ -189,7 +193,7 @@ def score_config(n: int, config: CholeskyConfig,
         config.policy, nt, config.block, multidevice=config.ndev > 1)
     pplan = config.plan or uniform_plan(nt, "f64", config.ladder)
     return _score(n, config.tb, config.policy, slots, pplan, config.ndev,
-                  hw, config)
+                  hw, config, grid=config.grid)
 
 
 def search(n: int,
@@ -201,16 +205,17 @@ def search(n: int,
 
     ``config`` pins the non-searched dimensions and declares which are
     open: ``tb=0`` searches tile sizes, ``policy="auto"`` searches
-    policies, ``cache_slots=0`` searches slot budgets; a concrete value
-    freezes that axis.  ``plans_by_tb`` optionally maps tile size ->
-    :class:`PrecisionPlan` (built from a representative matrix by
-    :func:`repro.tune.tune`) to score mixed-precision candidates; absent
-    entries score uniform f64.
+    policies, ``cache_slots=0`` searches slot budgets, and (for
+    ``ndev > 1``) ``grid=None`` searches every ``(p, q)`` factorization
+    of ``ndev``; a concrete value freezes that axis.  ``plans_by_tb``
+    optionally maps tile size -> :class:`PrecisionPlan` (built from a
+    representative matrix by :func:`repro.tune.tune`) to score
+    mixed-precision candidates; absent entries score uniform f64.
 
     Deterministic by construction: candidates are scored by an exact
     event simulation and ranked by ``(makespan, fewer bytes, policy
-    order, larger tb, fewer slots)`` — equal inputs always return the
-    identical ranking.
+    order, larger tb, fewer slots, grid)`` — equal inputs always return
+    the identical ranking.
     """
     base = config if config is not None else CholeskyConfig(
         tb=0, policy="auto")
@@ -248,6 +253,15 @@ def search(n: int,
             f"nt=[{NT_MIN}, {NT_MAX}] either leaves tb < {TB_MIN} or "
             f"overflows device memory at the policy minimum slot count")
 
+    if ndev == 1:
+        grids = [None]
+    elif base.grid is not None:
+        grids = [base.grid]
+    else:
+        # the grid dimension: every (p, q) factorization of ndev, the 1D
+        # tile-row layout (ndev, 1) among them
+        grids = [(d, ndev // d) for d in range(1, ndev + 1) if ndev % d == 0]
+
     candidates = []
     for tb in tbs:
         nt = n // tb
@@ -272,8 +286,10 @@ def search(n: int,
                 slot_opts = slot_candidates(policy, nt, tb, hw, ndev,
                                             base.block)
             for slots in slot_opts:
-                candidates.append(
-                    _score(n, tb, policy, slots, pplan, ndev, hw, base))
+                for grid in grids:
+                    candidates.append(
+                        _score(n, tb, policy, slots, pplan, ndev, hw,
+                               base, grid=grid))
     if not candidates:
         raise ValueError(
             f"no feasible (policy, cache_slots) candidate for n={n} on "
@@ -285,6 +301,7 @@ def search(n: int,
         _POLICY_RANK[c.config.policy],
         -c.config.tb,
         c.config.cache_slots,
+        c.config.grid or (c.config.ndev, 1),
     ))
     return TuneResult(n=n, ndev=ndev, hw=hw, candidates=candidates,
                       eps_target=eps_target)

@@ -44,6 +44,13 @@ GOLDEN = {
     "v1@ndev4": "50207d901c572dba",
     "v2@ndev4": "e99e475ca799fb14",
     "v3@ndev4": "d85c9d7501a73d7b",
+    # 2D block-cyclic (2, 2) grid at ndev=4 (PR 5): scoped partial
+    # broadcasts + host-landing RECVs enter the stream; the grid shape
+    # itself is folded into the hash (see MultiDeviceSchedule.digest)
+    "sync@grid2x2": "22c20bfd33f54f28",
+    "v1@grid2x2": "40517cc0bb9ac7cd",
+    "v2@grid2x2": "937da756885fa342",
+    "v3@grid2x2": "83c5b2f9cb5b8062",
 }
 
 
@@ -74,6 +81,10 @@ def _digests():
     for p in ("sync", "v1", "v2", "v3"):
         out[p + "@ndev4"] = build_multidevice_schedule(
             NT4, TB, 4, p, cache_slots=SLOTS, plan=plan4).digest()
+    for p in ("sync", "v1", "v2", "v3"):
+        out[p + "@grid2x2"] = build_multidevice_schedule(
+            NT4, TB, 4, p, cache_slots=SLOTS, plan=plan4,
+            grid=(2, 2)).digest()
     return out
 
 
@@ -134,3 +145,23 @@ def test_digest_pins_executor_metadata():
                                     plan=plan)
     assert m1.panel_base == -1
     assert m1.digest() == type(m1).from_single(s).digest()
+
+
+def test_digest_pins_grid():
+    """An explicit 1D grid hashes identically to the default (pre-grid
+    digests stay valid), and a 2D grid is folded into the hash — two
+    schedules differing only in grid address host slabs differently in
+    the executor, so they must not collide."""
+    import dataclasses
+    plan4 = _fixed_plan(NT4)
+    m_def = build_multidevice_schedule(NT4, TB, 4, "v3", cache_slots=SLOTS,
+                                       plan=plan4)
+    m_1d = build_multidevice_schedule(NT4, TB, 4, "v3", cache_slots=SLOTS,
+                                      plan=plan4, grid=(4, 1))
+    assert m_def.grid == (4, 1) and m_def.digest() == m_1d.digest()
+    m_2d = build_multidevice_schedule(NT4, TB, 4, "v3", cache_slots=SLOTS,
+                                      plan=plan4, grid=(2, 2))
+    assert m_2d.digest() != m_def.digest()
+    # identical streams with a relabeled grid must hash differently
+    relabeled = dataclasses.replace(m_2d, grid=(1, 4))
+    assert relabeled.digest() != m_2d.digest()

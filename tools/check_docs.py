@@ -1,0 +1,148 @@
+"""Docs gate: doctest the fenced Python blocks and verify intra-repo links.
+
+Covers README.md and every docs/*.md page:
+
+* every ```` ```python ```` fenced block is **executed** top to bottom
+  (blocks within one file share a namespace, so a page reads as one
+  script).  A block whose first line contains ``doctest: skip-run`` is
+  only compiled — for snippets that are illustrative or too slow for the
+  gate (e.g. live calibration).
+* every relative markdown link ``[text](target)`` must resolve to a file
+  or directory in the repo, and a ``#fragment`` on a markdown target
+  must match a heading slug in the linked (or same) file.
+
+Run from the repo root (CI does; tests/test_docs.py shells out to it):
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Exit code 0 = all blocks ran and all links resolve; failures print one
+line each with file/line context.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# [text](target) — excluding images' alt text edge cases is fine here
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_RUN = "doctest: skip-run"
+
+
+def doc_files() -> list[pathlib.Path]:
+    return [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+
+
+def code_blocks(path: pathlib.Path):
+    """Yield (start_line, language, source) for each fenced block."""
+    lang, buf, start = None, [], 0
+    for ln, line in enumerate(path.read_text().splitlines(), 1):
+        m = FENCE_RE.match(line.strip())
+        if m and lang is None:
+            lang, buf, start = m.group(1) or "", [], ln + 1
+        elif line.strip() == "```" and lang is not None:
+            yield start, lang, "\n".join(buf)
+            lang = None
+        elif lang is not None:
+            buf.append(line)
+
+
+def _rel(path: pathlib.Path):
+    """Repo-relative display path (tests feed files outside the repo)."""
+    try:
+        return path.relative_to(REPO)
+    except ValueError:
+        return path
+
+
+def heading_slugs(path: pathlib.Path) -> set[str]:
+    """GitHub-style anchor slugs of a markdown file's headings."""
+    slugs = set()
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if line.strip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence and line.startswith("#"):
+            text = line.lstrip("#").strip()
+            slug = re.sub(r"[^\w\- ]", "", text).strip().lower()
+            slugs.add(slug.replace(" ", "-"))
+    return slugs
+
+
+def check_code(files, errors: list[str]) -> int:
+    ran = 0
+    for path in files:
+        ns: dict = {"__name__": f"doctest:{path.name}"}
+        for line, lang, src in code_blocks(path):
+            if lang != "python":
+                continue
+            rel = _rel(path)
+            first = src.splitlines()[0] if src.splitlines() else ""
+            try:
+                code = compile(src, f"{rel}:{line}", "exec")
+            except SyntaxError as e:
+                errors.append(f"{rel}:{line}: syntax error in python "
+                              f"block: {e}")
+                continue
+            if SKIP_RUN in first:
+                ran += 1
+                continue
+            try:
+                exec(code, ns)
+                ran += 1
+            except Exception as e:  # noqa: BLE001
+                errors.append(f"{rel}:{line}: python block failed: "
+                              f"{type(e).__name__}: {e}")
+    return ran
+
+
+def check_links(files, errors: list[str]) -> int:
+    checked = 0
+    for path in files:
+        in_fence = False
+        for ln, line in enumerate(path.read_text().splitlines(), 1):
+            if line.strip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                checked += 1
+                rel = _rel(path)
+                base, _, frag = target.partition("#")
+                dest = (path.parent / base).resolve() if base else path
+                if not dest.exists():
+                    errors.append(f"{rel}:{ln}: broken link -> {target}")
+                    continue
+                if frag and dest.suffix == ".md":
+                    if frag not in heading_slugs(dest):
+                        errors.append(f"{rel}:{ln}: missing anchor "
+                                      f"#{frag} in {base or rel}")
+    return checked
+
+
+def main() -> int:
+    files = doc_files()
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        print(f"missing doc files: {missing}")
+        return 1
+    errors: list[str] = []
+    nblocks = check_code(files, errors)
+    nlinks = check_links(files, errors)
+    for e in errors:
+        print(e)
+    status = "FAILED" if errors else "ok"
+    print(f"docs check {status}: {len(files)} files, {nblocks} python "
+          f"blocks, {nlinks} intra-repo links, {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
