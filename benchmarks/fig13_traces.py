@@ -68,5 +68,25 @@ def run(out):
         cfg = repro.CholeskyConfig(tb=tb, policy="v3", plan=_plan(nt, decay))
         t[name] = repro.plan(n, cfg).simulate(hw).compute_busy
     assert t["weak"] < t["strong"]
+
+    # pipelined-panel trace (PR 6): the per-device d{d}:pipe lanes color
+    # lookahead-panel work distinctly from the trailing update, so the
+    # overlap the emitter buys is visible at chrome://tracing
+    from repro.core.analytics import simulate_multi
+    from repro.core.schedule import build_multidevice_schedule
+    m = build_multidevice_schedule(nt, tb, 4, "v3", grid=(2, 2),
+                                   lookahead=2)
+    r = simulate_multi(m, hw, record_timeline=True)
+    tr = chrome_trace(r, OUT_DIR / "fig13_pipeline_2x2_la2.trace.json")
+    pipe = [e for e in tr["traceEvents"] if e.get("cat", "").endswith(":pipe")]
+    ahead = sum(1 for e in pipe if e["name"].startswith("ahead:"))
+    assert ahead and len(pipe) > ahead     # both phases present + colored
+    out(f"[pipeline] (2,2) lookahead=2, 4 devices "
+        f"({r.makespan*1e3:.0f} ms): {ahead} lookahead-panel spans vs "
+        f"{len(pipe) - ahead} trailing-update spans on the d*:pipe lanes")
+    _export("pipeline_2x2_la2", r, out)
+    data["pipeline"] = {"makespan_s": r.makespan, "lookahead": 2,
+                        "grid": [2, 2], "ahead_spans": ahead,
+                        "trail_spans": len(pipe) - ahead}
     out("")
     return data

@@ -26,9 +26,16 @@ Multi-device (0.5): ``CholeskyConfig(ndev=4)`` runs one static op
 stream per device — 1D tile-row ownership by default, or a 2D
 block-cyclic grid (``grid=(2, 2)``) whose scoped broadcasts cut the
 interconnect volume to O(sqrt(P)); the tuner searches the grid shape
-when it is left open.  The ``docs/`` tree (architecture,
-schedule-format, multidevice, tuning) is the narrative documentation;
-its code blocks are executed by CI.
+when it is left open.
+
+Lookahead pipelining (0.6): schedules are built from an explicit tile
+task DAG (:mod:`repro.core.taskgraph`) by a topological emitter;
+``CholeskyConfig(ndev=4, grid=(2, 2), lookahead=2)`` interleaves up to
+``lookahead`` panel columns ahead of the trailing update with eager
+peer pushes, closing the 2D grid's compute-bound makespan gap (the
+tuner searches the depth when it is left open).  The ``docs/`` tree
+(architecture, schedule-format, multidevice, tuning) is the narrative
+documentation; its code blocks are executed by CI.
 """
 from repro.core.analytics import (HW, HardwareModel, ascii_trace,
                                   chrome_trace, crosscheck_executed_volume,
@@ -43,10 +50,11 @@ from repro.core.precision import (LADDERS, PrecisionPlan, assign_precision,
                                   uniform_plan)
 from repro.core.schedule import (MultiDeviceSchedule, Op, OpKind, Schedule,
                                  build_multidevice_schedule, build_schedule)
+from repro.core.taskgraph import build_task_dag, verify_dispatch
 from repro.core.tiling import TileLayout, from_tiles, random_spd, to_tiles
 from repro import tune
 
-__version__ = "0.5.0"
+__version__ = "0.6.0"
 
 __all__ = [
     "__version__",
@@ -57,9 +65,10 @@ __all__ = [
     # one-shot shim + precision planning
     "ooc_cholesky", "plan_for_matrix",
     "PrecisionPlan", "assign_precision", "uniform_plan", "LADDERS",
-    # schedules
+    # schedules + task DAG
     "Schedule", "MultiDeviceSchedule", "Op", "OpKind",
     "build_schedule", "build_multidevice_schedule",
+    "build_task_dag", "verify_dispatch",
     # analytics
     "HardwareModel", "HW", "simulate", "simulate_multi",
     "volume_report", "volume_report_multi", "ascii_trace", "chrome_trace",

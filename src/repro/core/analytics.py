@@ -297,9 +297,16 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
     coherence instead of a device slot: later LOADs of that tile on the
     receiver wait for it.
 
-    Streams are replayed column-by-column in
-    :meth:`MultiDeviceSchedule.column_device_order`, which is exactly
-    the partial order the BCAST/RECV edges impose.
+    Streams are replayed in :meth:`MultiDeviceSchedule.dispatch_chunks`
+    order — column-by-column owner-first for ``lookahead=0`` (exactly
+    the partial order the BCAST/RECV edges impose), and the emitter's
+    interleaved final/advance waves for pipelined schedules, where the
+    advance chunk of column ``k+lookahead`` overlaps the other grid
+    columns' trailing updates.  With ``record_timeline`` and
+    ``lookahead > 0`` an extra ``d{d}:pipe`` lane per device tags every
+    compute span ``ahead:`` (lookahead-panel work: push/advance phases)
+    or ``trail:`` (trailing-update work) so the overlap is visible in
+    :func:`chrome_trace`.
     """
     if link_bw is None:
         link_bw = hw.link_bw or hw.h2d_bw
@@ -328,7 +335,11 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
         if record_timeline:
             timeline.append((engine, start, end, label))
 
-    def run_op(d, op):
+    # phases emitted ahead of the trailing update (lookahead pipeline)
+    _AHEAD_PHASES = {"push", "recv-ahead", "advance"}
+    pipe_lane = record_timeline and msched.lookahead > 0
+
+    def run_op(d, op, phase="update"):
         nonlocal t_link, link_busy, link_bytes
         if op.kind is OpKind.LOAD:
             dur = op.bytes / hw.h2d_bw
@@ -401,10 +412,15 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
                 if s >= 0 and s != op.slot_c:
                     reads[d][s] = max(reads[d][s], t_cmp[d])
             span(f"d{d}:cmp", start, t_cmp[d], op.kind.value)
+            if pipe_lane:
+                tag = "ahead" if phase in _AHEAD_PHASES else "trail"
+                span(f"d{d}:pipe", start, t_cmp[d],
+                     f"{tag}:{op.kind.value}")
 
-    # replay column-by-column, owner first (the BCAST->RECV partial order)
-    for d, op in msched.iter_column_order():
-        run_op(d, op)
+    # replay in dispatch-chunk order (owner-first per column at
+    # lookahead=0; the emitter's interleaved waves for lookahead>0)
+    for d, op, phase in msched.iter_dispatch_order(with_phase=True):
+        run_op(d, op, phase)
 
     devices = [
         DeviceSimStats(
@@ -500,6 +516,12 @@ def chrome_trace(result, path=None) -> dict:
     every span a complete ``"X"`` event with microsecond timestamps.
     Load the file at chrome://tracing or https://ui.perfetto.dev.
 
+    Multi-device timelines recorded from a ``lookahead > 0`` schedule
+    carry per-device ``d{d}:pipe`` "panel pipeline" lanes whose spans
+    are prefixed ``ahead:`` / ``trail:``; those get distinct chrome
+    colors (``cname``) so lookahead-panel work is visually separable
+    from the trailing update it overlaps.
+
     Returns the trace dict; with ``path`` given it is also written there
     as JSON.  Simulations must be run with ``record_timeline=True``.
     """
@@ -517,11 +539,16 @@ def chrome_trace(result, path=None) -> dict:
     ]
     tids = {engine: t for t, engine in enumerate(engines)}
     for engine, start, end, label in result.timeline:
-        events.append({
+        ev = {
             "name": label, "cat": engine, "ph": "X",
             "ts": start * 1e6, "dur": (end - start) * 1e6,
             "pid": 0, "tid": tids[engine],
-        })
+        }
+        if engine.endswith(":pipe"):
+            ev["cname"] = ("thread_state_running"
+                           if label.startswith("ahead:")
+                           else "grey")
+        events.append(ev)
     trace = {
         "traceEvents": events,
         "displayTimeUnit": "ms",

@@ -81,7 +81,11 @@ class CholeskyConfig:
     broadcast — strictly less interconnect traffic than 1D for every
     true 2D factorization.  ``grid=None`` means the 1D tile-row layout
     ``(ndev, 1)``, except under the autotuner, which searches every
-    factorization of ``ndev`` (docs/multidevice.md).
+    factorization of ``ndev`` (docs/multidevice.md).  ``lookahead=L > 0``
+    pipelines up to ``L`` panel columns ahead of the trailing update
+    (eager peer pushes + rotating panel regions — each depth pins one
+    extra cache slot and ``nt`` extra panel slots); ``None`` means 0,
+    or a searched dimension when the tuner is engaged.
 
     Open dimensions (0.4): ``tb=0`` and/or ``policy="auto"`` leave those
     axes to the autotuner — ``plan()`` resolves them through
@@ -108,6 +112,10 @@ class CholeskyConfig:
                                               #   1D (ndev, 1), or searched
                                               #   when the tuner is engaged
     hw: Optional[str] = None                  # analytics.HW preset name
+    lookahead: Optional[int] = None           # pipelined panels ahead of the
+                                              #   trailing update (ndev > 1);
+                                              #   None = 0, or searched when
+                                              #   the tuner is engaged
 
     def __post_init__(self):
         object.__setattr__(self, "policy", str(self.policy).lower())
@@ -145,6 +153,18 @@ class CholeskyConfig:
                 raise ValueError(
                     f"grid={self.grid} does not factor ndev={self.ndev} "
                     f"(need p*q == ndev)")
+        if self.lookahead is not None:
+            if (isinstance(self.lookahead, bool)
+                    or not isinstance(self.lookahead, int)
+                    or self.lookahead < 0):
+                raise ValueError(f"lookahead must be an int >= 0 (or None "
+                                 f"to leave it to the tuner), got "
+                                 f"{self.lookahead!r}")
+            if self.lookahead > 0 and self.ndev < 2:
+                raise ValueError(
+                    f"lookahead={self.lookahead} pipelines panels across "
+                    f"devices and needs ndev > 1 (got ndev={self.ndev}); "
+                    f"the single-device analogue is policy='async'/'v4'")
         if (len(self.block) != 2
                 or any(not isinstance(x, int) or x < 1 for x in self.block)):
             raise ValueError(f"block must be two positive ints, "
@@ -157,14 +177,19 @@ class CholeskyConfig:
             # eager slot-minimum validation: an unbuildable budget used to
             # surface only as a cache-thrash RuntimeError deep inside
             # schedule construction
-            floor = min_cache_slots(self.policy, self.block)
+            floor = min_cache_slots(self.policy, self.block,
+                                    self.lookahead or 0)
             if self.cache_slots < floor:
                 raise ValueError(
                     f"policy {self.policy!r}"
                     + (f" with block={self.block}" if self.policy == "v4"
                        else "")
+                    + (f" at lookahead={self.lookahead}"
+                       if self.lookahead else "")
                     + f" needs >= {floor} cache slots"
-                    + (" (h*w + w + 2)" if self.policy == "v4" else "")
+                    + (" (h*w + w + 2)" if self.policy == "v4" else
+                       " (each lookahead depth pins one extra slot)"
+                       if self.lookahead else "")
                     + f", got {self.cache_slots}")
         if self.ndev > 1 and self.policy not in _MULTIDEV_POLICIES \
                 and self.policy != "auto":
@@ -547,6 +572,10 @@ def plan(n: int, config: CholeskyConfig | None = None,
         # schedule as grid=None: canonicalize so both key one cached plan
         # and one jitted executor
         config = dataclasses.replace(config, grid=None)
+    if config.lookahead == 0:
+        # same canonicalization for an explicit zero lookahead: the
+        # emitter's L=0 streams are bit-identical to the default
+        config = dataclasses.replace(config, lookahead=None)
     layout = TileLayout(n, config.tb)   # validates n % tb == 0
     key = (n, config)
     cached = _PLAN_CACHE.get(key)
@@ -562,7 +591,8 @@ def plan(n: int, config: CholeskyConfig | None = None,
     if config.ndev > 1:
         msched = build_multidevice_schedule(
             layout.nt, config.tb, config.ndev, config.policy,
-            config.cache_slots, pplan, grid=config.grid)
+            config.cache_slots, pplan, grid=config.grid,
+            lookahead=config.lookahead or 0)
         single = None
     else:
         single = build_schedule(layout.nt, config.tb, config.policy,

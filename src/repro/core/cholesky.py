@@ -131,9 +131,10 @@ def run_multidevice_numpy(host_tiles: np.ndarray,
     """Interpret all per-device op streams against one host tile store.
 
     Each device gets its own slot buffer; the streams are replayed in
-    :meth:`MultiDeviceSchedule.iter_column_order` (column-by-column,
-    owner first), so every RECV observes the owner's finalized
-    (host-coherent) panel-row tile.
+    :meth:`MultiDeviceSchedule.iter_dispatch_order` (column-major with
+    the owner first for ``lookahead = 0``, the emitter's pipelined chunk
+    order otherwise), so every RECV observes the sender's finalized
+    (host-coherent) tile.
     """
     host = host_tiles.astype(np.float64).copy()
     tb = msched.tb
@@ -249,8 +250,9 @@ def _wire_dtype(cls_name: str, compute_dtype):
 class MultiDeviceJaxExecutor:
     """Replay a :class:`MultiDeviceSchedule` on ``ndev`` real JAX devices.
 
-    Each device stream is compiled as a sequence of *column segments* —
-    unrolled jitted programs (same op semantics and kernel fns as the
+    Each device stream is compiled as a sequence of *dispatch-chunk
+    segments* (:meth:`MultiDeviceSchedule.dispatch_chunks`) — unrolled
+    jitted programs (same op semantics and kernel fns as the
     single-device executor) operating on that device's block-cyclic host
     row slab and its private slot buffer.  The slab holds the tile rows
     of the device's *grid row* (``[ceil(Nt/p), Nt, tb, tb]``; with the 1D
@@ -260,11 +262,10 @@ class MultiDeviceJaxExecutor:
     leaves a device: a segment returns the tiles its BCAST ops publish,
     rounded to their class (wire) dtype, and :func:`jax.device_put`
     moves each tile to its receivers, where the consuming segment writes
-    it into the dedicated panel slot (``panel_base + n``) — or, for the
-    2D grid's row-scoped ownership broadcast (``slot_c < 0``), directly
-    into the receiver's host slab at ``(m, k)``.  Per column ``k`` the
-    dispatch order is :meth:`MultiDeviceSchedule.column_device_order`,
-    with the diagonal owner's stream split at its last panel BCAST::
+    it into its panel slot — or, for the 2D grid's row-scoped ownership
+    broadcast (``slot_c < 0``), directly into the receiver's host slab.
+    For ``lookahead = 0`` the chunk order is the historical per-column
+    wave::
 
         owner head (diag update + POTRF + panel-row wire tiles)
           -> device_put to each grid-column peer  (the BCAST/RECV edges)
@@ -272,8 +273,12 @@ class MultiDeviceJaxExecutor:
           -> each worker's segment (RECV + rows)    |  (async dispatch)
           -> row-scoped receivers (host-slab RECVs of finalized tiles)
 
-    so the owner's trailing update overlaps the peers' broadcasts and
-    updates exactly as in the static schedule's partial order.
+    and for ``lookahead > 0`` the emitter's pipelined chunk list: a
+    column's final waves interleave with the next panels' bulk pushes,
+    eager panel receives, and advance-update segments (whose partial
+    accumulators are stored back to the slab), so the owner's trailing
+    update overlaps the in-flight panels exactly as in the static
+    schedule's partial order.
 
     Numerics are op-for-op those of :func:`run_multidevice_numpy`: a RECV
     observes the sender's host-coherent tile rounded through its class, so
@@ -320,7 +325,7 @@ class MultiDeviceJaxExecutor:
         self._local_row = [
             {g: l for l, g in enumerate(rows)} for rows in self._rows
         ]
-        self._columns = self._build_columns()
+        self._segments = self._build_segments()
 
     # -- compile-time: split streams into per-column jitted segments -------
     def _make_segment(self, d: int, ops: list[Op]):
@@ -356,54 +361,32 @@ class MultiDeviceJaxExecutor:
 
         return jax.jit(seg), recv_ops, bcast_ops
 
-    def _build_columns(self):
-        """Group each stream by column step and compile the segments.
+    def _build_segments(self):
+        """Compile one jitted segment per dispatch chunk.
 
-        Per column the segments run in
-        :meth:`MultiDeviceSchedule.column_device_order`; the diagonal
-        owner's ops split at its last *panel* BCAST into a head (diagonal
-        work + published panel wires) and a tail (its own rows), so the
-        grid-column peers can start as soon as the panel row is on the
-        wire while the owner's trailing update keeps running.  Each
-        column also records how many receivers every published wire has
-        (the executed-bcast-bytes accounting for scoped broadcasts).
+        The segment waves are :meth:`MultiDeviceSchedule.dispatch_chunks`
+        — for ``lookahead = 0`` the historical column-major order (the
+        diagonal owner's column ops split at its last panel BCAST into a
+        head publishing the panel wires and a tail running its own rows);
+        for ``lookahead > 0`` the emitter's interleaved final / advance /
+        push chunks, so an in-flight panel's early updates run between a
+        column's finalization waves.  Wires are matched to their RECVs by
+        ``(i, j, k, src)`` — with eager panel pushes the same tile can be
+        on two wires at once (row-scoped now, panel-scoped for a later
+        column), so the tile id alone is not a key.  ``self._nrecv``
+        records each wire's receiver count (executed-bcast-bytes
+        accounting for scoped broadcasts, and wire lifetime).
         """
         msched = self.msched
-        nt, ndev = msched.nt, msched.ndev
-        ptr = [0] * ndev
-        columns = []
-        for k in range(nt):
-            per_dev = []
-            for d in range(ndev):
-                stream = msched.streams[d]
-                start = ptr[d]
-                while ptr[d] < len(stream) and stream[ptr[d]].k == k:
-                    ptr[d] += 1
-                per_dev.append(stream[start:ptr[d]])
-            nrecv = {}
-            for ops in per_dev:
-                for o in ops:
-                    if o.kind is OpKind.RECV:
-                        nrecv[(o.i, o.j)] = nrecv.get((o.i, o.j), 0) + 1
-            segs = []
-            order = msched.column_device_order(k)
-            dv = order[0]
-            for d in order:
-                ops = per_dev[d]
-                if not ops:
-                    continue
-                if d == dv:
-                    split = max((i + 1 for i, o in enumerate(ops)
-                                 if o.kind is OpKind.BCAST and o.i == k),
-                                default=len(ops))
-                    segs.append((d,) + self._make_segment(d, ops[:split]))
-                    if ops[split:]:
-                        segs.append((d,) + self._make_segment(d, ops[split:]))
-                else:
-                    segs.append((d,) + self._make_segment(d, ops))
-            columns.append((segs, nrecv))
-        assert all(ptr[d] == len(msched.streams[d]) for d in range(ndev))
-        return columns
+        nrecv = {}
+        for stream in msched.streams:
+            for o in stream:
+                if o.kind is OpKind.RECV:
+                    key = (o.i, o.j, o.k, o.src)
+                    nrecv[key] = nrecv.get(key, 0) + 1
+        self._nrecv = nrecv
+        return [(d,) + self._make_segment(d, msched.streams[d][start:stop])
+                for d, start, stop, _k, _phase in msched.dispatch_chunks()]
 
     # -- run time ----------------------------------------------------------
     def __call__(self, host_tiles: np.ndarray) -> np.ndarray:
@@ -423,20 +406,27 @@ class MultiDeviceJaxExecutor:
         ]
         stats = {"bcast_ops": 0, "recv_ops": 0,
                  "bcast_bytes": 0, "recv_bytes": 0}
-        for segs, nrecv in self._columns:
-            wire_of = {}
-            for d, fn, recv_ops, bcast_ops in segs:
-                recv_tiles = tuple(
-                    jax.device_put(wire_of[(o.i, o.j)], self.devices[d])
-                    for o in recv_ops)
-                stats["recv_ops"] += len(recv_tiles)
-                stats["recv_bytes"] += sum(t.nbytes for t in recv_tiles)
-                host_d[d], slots_d[d], wires = fn(host_d[d], slots_d[d],
-                                                  recv_tiles)
-                for o, t in zip(bcast_ops, wires):
-                    wire_of[(o.i, o.j)] = t
-                    stats["bcast_bytes"] += t.nbytes * nrecv[(o.i, o.j)]
-                stats["bcast_ops"] += len(bcast_ops)
+        wire_of = {}
+        pending = dict(self._nrecv)     # wire -> receivers still to land
+        for d, fn, recv_ops, bcast_ops in self._segments:
+            recv_tiles = tuple(
+                jax.device_put(wire_of[(o.i, o.j, o.k, o.src)],
+                               self.devices[d])
+                for o in recv_ops)
+            for o in recv_ops:
+                key = (o.i, o.j, o.k, o.src)
+                pending[key] -= 1
+                if pending[key] == 0:   # last receiver landed: free the wire
+                    del wire_of[key]
+            stats["recv_ops"] += len(recv_tiles)
+            stats["recv_bytes"] += sum(t.nbytes for t in recv_tiles)
+            host_d[d], slots_d[d], wires = fn(host_d[d], slots_d[d],
+                                              recv_tiles)
+            for o, t in zip(bcast_ops, wires):
+                key = (o.i, o.j, o.k, o.src)
+                wire_of[key] = t
+                stats["bcast_bytes"] += t.nbytes * self._nrecv[key]
+            stats["bcast_ops"] += len(bcast_ops)
         out = np.empty_like(host_tiles)
         p, q = msched.grid
         for d, rows in enumerate(row_slabs):

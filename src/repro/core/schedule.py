@@ -68,7 +68,8 @@ from .precision import PrecisionPlan, BYTES, uniform_plan
 from .tiling import grid_owner
 
 
-def min_cache_slots(policy: str, block: tuple = (4, 4)) -> int:
+def min_cache_slots(policy: str, block: tuple = (4, 4),
+                    lookahead: int = 0) -> int:
     """Smallest device-slot budget a policy's schedule can be built with.
 
     These are the worst-case *concurrent pin* counts of each builder (one
@@ -82,6 +83,12 @@ def min_cache_slots(policy: str, block: tuple = (4, 4)) -> int:
       * ``v4`` pins an h x w accumulator block plus w panel operands plus
         the A operand and the diagonal (``h*w + w + 2``).
 
+    Each lookahead depth of a pipelined multi-device schedule pins one
+    extra slot on top: the advance chunks of an in-flight panel hold
+    their own accumulator/operand pins concurrently with the final
+    chunk's, and the panel-slot region itself starts at ``cache_slots``
+    (growing the budget moves ``panel_base`` up with it).
+
     The tuner's feasibility filter and ``CholeskyConfig``'s eager
     validation both consult this instead of re-deriving the constants.
     """
@@ -89,25 +96,28 @@ def min_cache_slots(policy: str, block: tuple = (4, 4)) -> int:
     if policy == "v4":
         h, w = block
         return h * w + w + 2
-    return {"sync": 3, "async": 3, "v1": 4, "v2": 3, "v3": 4}[policy]
+    return ({"sync": 3, "async": 3, "v1": 4, "v2": 3, "v3": 4}[policy]
+            + lookahead)
 
 
 def default_cache_slots(policy: str, nt: int, block: tuple = (4, 4),
-                        multidevice: bool = False) -> int:
+                        multidevice: bool = False,
+                        lookahead: int = 0) -> int:
     """Slot budget the builders use when ``cache_slots`` is 0 (unset).
 
     Exactly the historical inlined defaults (golden op streams depend on
     them): ``2*nt + 2`` (floor 4) for the cache-table policies, the fixed
     4-slot window for multi-device sync/v1, and ``h*w + h + w + 4`` for
-    the 2D-blocked v4.
+    the 2D-blocked v4 — plus one slot per lookahead depth (see
+    :func:`min_cache_slots`).
     """
     policy = policy.lower()
     if policy == "v4":
         h, w = block
         return h * w + h + w + 4
     if multidevice and policy not in ("v2", "v3"):
-        return 4
-    return max(4, nt * 2 + 2)
+        return 4 + lookahead
+    return max(4, nt * 2 + 2) + lookahead
 
 
 class OpKind(enum.Enum):
@@ -577,6 +587,9 @@ class MultiDeviceSchedule:
     evictions: list[int] = dataclasses.field(default_factory=list)
     panel_base: int = -1     # first panel slot id; -1 = no panel region
     grid: tuple = ()         # (p, q) device grid; () normalizes to (ndev, 1)
+    lookahead: int = 0       # pipelined-panel depth (0 = column-major)
+    dispatch: Optional[list] = None  # (dev, start, stop, k, phase) chunks;
+    #                          None = derivable column-major order
 
     def __post_init__(self):
         if not self.grid:
@@ -651,6 +664,15 @@ class MultiDeviceSchedule:
             h.update(f"|panel{self.panel_base}|".encode())
             if self.grid[1] > 1:
                 h.update(f"grid{self.grid[0]}x{self.grid[1]}|".encode())
+            if self.lookahead > 0:
+                # a pipelined schedule's dispatch chunks are executor
+                # metadata exactly like panel_base: the segment waves the
+                # JAX executor jits follow them, so fold them in (the
+                # lookahead=0 column-major order is derivable and stays
+                # out, keeping historical digests valid)
+                h.update(f"look{self.lookahead}|".encode())
+                for c in self.dispatch or ():
+                    h.update(f"{c[0]}:{c[1]}:{c[2]}:{c[3]}:{c[4]};".encode())
         for d, stream in enumerate(self.streams):
             h.update(f"|dev{d}|".encode())
             if self.ndev > 1:
@@ -673,19 +695,63 @@ class MultiDeviceSchedule:
                 if d != dv and d % q != k % q]
         return [dv] + workers + rest
 
-    def iter_column_order(self):
-        """Yield ``(device, op)`` column-by-column, in
-        :meth:`column_device_order` — the one order both replayers (the
-        NumPy executor and the event simulator) must share with the
-        builder's ownership rule."""
+    def dispatch_chunks(self) -> list[tuple]:
+        """The schedule's dispatch order as ``(dev, start, stop, k,
+        phase)`` stream slices — the one order every op-stream consumer
+        (NumPy replay, JAX executor segments, event simulator) shares
+        with the builder.
+
+        Pipelined schedules (``lookahead > 0``) carry the emitter's
+        chunk list verbatim (final / advance / push waves interleave
+        across columns); for ``lookahead = 0`` the historical
+        column-major order is derived from :meth:`column_device_order`,
+        splitting each diagonal owner's column ops at its last panel
+        BCAST (the head every receiver's RECV depends on)."""
+        if self.dispatch is not None:
+            return self.dispatch
+        chunks = []
         ptr = [0] * self.ndev
+        q = self.grid[1]
         for k in range(self.nt):
-            for d in self.column_device_order(k):
+            order = self.column_device_order(k)
+            dv = order[0]
+            for d in order:
                 stream = self.streams[d]
+                start = ptr[d]
                 while ptr[d] < len(stream) and stream[ptr[d]].k == k:
-                    yield d, stream[ptr[d]]
                     ptr[d] += 1
+                if ptr[d] == start:
+                    continue
+                if d == dv:
+                    ops = stream[start:ptr[d]]
+                    split = max((i + 1 for i, o in enumerate(ops)
+                                 if o.kind is OpKind.BCAST and o.i == k),
+                                default=len(ops))
+                    chunks.append((d, start, start + split, k, "panel"))
+                    if start + split < ptr[d]:
+                        chunks.append((d, start + split, ptr[d], k, "update"))
+                else:
+                    phase = "update" if d % q == k % q else "recv"
+                    chunks.append((d, start, ptr[d], k, phase))
         assert all(ptr[d] == len(self.streams[d]) for d in range(self.ndev))
+        return chunks
+
+    def iter_dispatch_order(self, with_phase: bool = False):
+        """Yield ``(device, op)`` (or ``(device, op, phase)``) in
+        dispatch-chunk order — see :meth:`dispatch_chunks`."""
+        for d, start, stop, _k, phase in self.dispatch_chunks():
+            stream = self.streams[d]
+            for idx in range(start, stop):
+                if with_phase:
+                    yield d, stream[idx], phase
+                else:
+                    yield d, stream[idx]
+
+    def iter_column_order(self):
+        """Back-compat alias for :meth:`iter_dispatch_order` (the name
+        predates lookahead pipelining, when the dispatch order was
+        always column-major)."""
+        return self.iter_dispatch_order()
 
 
 def build_multidevice_schedule(
@@ -696,6 +762,7 @@ def build_multidevice_schedule(
     cache_slots: int = 0,
     plan: PrecisionPlan | None = None,
     grid: tuple | None = None,
+    lookahead: int = 0,
 ) -> MultiDeviceSchedule:
     """Emit per-device op streams for the block-cyclic tile Cholesky.
 
@@ -717,6 +784,15 @@ def build_multidevice_schedule(
     broadcast per column); with ``ndev=1`` the single stream is
     op-for-op identical to :func:`build_schedule` for the same policy
     (no BCAST/RECV emitted).
+
+    ``lookahead = L > 0`` pipelines up to ``L`` panels ahead of the
+    trailing update (Donfack et al., arXiv:1110.2677): construction runs
+    as an explicit task DAG plus a topological emitter
+    (:mod:`repro.core.taskgraph`), finalized panel tiles are pushed
+    eagerly to their grid-row peers, and the dispatch order becomes the
+    emitter's chunk list (``dispatch``) instead of the column-major
+    walk.  ``lookahead = 0`` reproduces the historical streams
+    bit-identically.
     """
     policy = policy.lower()
     if policy not in ("sync", "v1", "v2", "v3"):
@@ -739,164 +815,32 @@ def build_multidevice_schedule(
         raise ValueError("precision plan Nt mismatch")
 
     operand_cache = policy in ("v2", "v3")
-    reuse_accum = policy in ("v1", "v2", "v3")
-    pin_diag = policy == "v3"
+    if lookahead < 0 or lookahead >= nt:
+        raise ValueError(
+            f"lookahead must be in [0, nt); got {lookahead} at nt={nt}")
+    if lookahead > 0 and ndev < 2:
+        raise ValueError("lookahead pipelines panels across devices; "
+                         "it needs ndev > 1")
     if cache_slots <= 0:
-        cache_slots = default_cache_slots(policy, nt, multidevice=True)
-    panel_base = cache_slots          # panel slot of tile (k, n) = base + n
+        cache_slots = default_cache_slots(policy, nt, multidevice=True,
+                                          lookahead=lookahead)
+    elif lookahead > 0 \
+            and cache_slots < min_cache_slots(policy, lookahead=lookahead):
+        raise ValueError(
+            f"lookahead={lookahead} {policy} schedules need >= "
+            f"{min_cache_slots(policy, lookahead=lookahead)} cache slots "
+            f"(each in-flight panel pins one more), got {cache_slots}")
 
-    streams: list[list[Op]] = [[] for _ in range(ndev)]
-    emits = [s.append for s in streams]
-    caches = ([_CacheTable(cache_slots, emits[d], plan, tb)
-               for d in range(ndev)] if operand_cache else None)
-
-    def tbytes(i, j):
-        cls = int(plan.classes[i, j])
-        return cls, BYTES[plan.ladder[cls]] * tb * tb
-
-    def ccls(*tiles):
-        return max(int(plan.classes[i, j]) for i, j in tiles)
-
-    def store(d, i, j, s, k):
-        cls, nb = tbytes(i, j)
-        emits[d](Op(OpKind.STORE, i=i, j=j, slot_c=s, cls=cls, bytes=nb, k=k))
-
-    def naive_load(d, i, j, k, slot):
-        cls, nb = tbytes(i, j)
-        emits[d](Op(OpKind.LOAD, i=i, j=j, slot_c=slot, cls=cls, bytes=nb, k=k))
-        return slot
-
-    def broadcast_row(k, ow):
-        """Column-scoped panel broadcast: the diagonal owner ships the
-        finalized row (k, 0..k) to the other devices of grid column
-        ``k % q`` (all peers in the 1D degenerate)."""
-        receivers = [grid_owner(r, k, p, q) for r in range(p) if r != k % p]
-        if not receivers:
-            return
-        for n in range(k + 1):
-            cls, nb = tbytes(k, n)
-            emits[ow](Op(OpKind.BCAST, i=k, j=n, cls=cls,
-                         bytes=nb * len(receivers), k=k, src=ow))
-            for d in receivers:
-                emits[d](Op(OpKind.RECV, i=k, j=n, slot_c=panel_base + n,
-                            cls=cls, bytes=nb, k=k, src=ow))
-
-    def broadcast_tile(k, m, d):
-        """Row-scoped ownership broadcast (q > 1 only): the finalizing
-        device ships tile (m, k) to its grid-row peers' host slabs, where
-        later steps load it as a GEMM operand."""
-        receivers = [grid_owner(m, c, p, q) for c in range(q) if c != k % q]
-        if not receivers:
-            return
-        cls, nb = tbytes(m, k)
-        emits[d](Op(OpKind.BCAST, i=m, j=k, cls=cls,
-                    bytes=nb * len(receivers), k=k, src=d))
-        for r in receivers:
-            emits[r](Op(OpKind.RECV, i=m, j=k, slot_c=-1,
-                        cls=cls, bytes=nb, k=k, src=d))
-
-    for k in range(nt):
-        ow = grid_owner(k, k, p, q)   # diagonal owner of step k
-
-        # --- 1) owner updates + factors the diagonal tile (device-local) ---
-        if operand_cache:
-            cache = caches[ow]
-            c = cache.load(k, k, k, pin=True)
-            for n in range(k):
-                a = cache.load(k, n, k, pin=True)
-                emits[ow](Op(OpKind.SYRK, slot_c=c, slot_a=a, k=k,
-                             cls=ccls((k, n))))
-                cache.unpin(a)
-            emits[ow](Op(OpKind.POTRF, slot_c=c, k=k, cls=ccls((k, k))))
-            store(ow, k, k, c, k)
-            cache.unpin(c)
-            cache.adopt(k, k, c, pin=pin_diag)
-            diag_slot = c
-        elif reuse_accum:  # v1
-            c = naive_load(ow, k, k, k, 0)
-            for n in range(k):
-                a = naive_load(ow, k, n, k, 1)
-                emits[ow](Op(OpKind.SYRK, slot_c=c, slot_a=a, k=k,
-                             cls=ccls((k, n))))
-            emits[ow](Op(OpKind.POTRF, slot_c=c, k=k, cls=ccls((k, k))))
-            store(ow, k, k, c, k)
-        else:  # sync
-            for n in range(k):
-                c = naive_load(ow, k, k, k, 0)
-                a = naive_load(ow, k, n, k, 1)
-                emits[ow](Op(OpKind.SYRK, slot_c=c, slot_a=a, k=k,
-                             cls=ccls((k, n))))
-                store(ow, k, k, c, k)
-            c = naive_load(ow, k, k, k, 0)
-            emits[ow](Op(OpKind.POTRF, slot_c=c, k=k, cls=ccls((k, k))))
-            store(ow, k, k, c, k)
-
-        # --- 2) panel-row broadcast (grid-column scoped) ---
-        broadcast_row(k, ow)
-
-        # --- 3) the grid-column devices update their rows of column k ---
-        for m in range(k + 1, nt):
-            d = grid_owner(m, k, p, q)
-            local = m % p == k % p   # row-k operands on-device vs panel
-            if operand_cache:
-                cache = caches[d]
-                c = cache.load(m, k, k, pin=True)
-                for n in range(k):
-                    a = cache.load(m, n, k, pin=True)
-                    b = (cache.load(k, n, k, pin=True) if local
-                         else panel_base + n)
-                    emits[d](Op(OpKind.GEMM, slot_c=c, slot_a=a, slot_b=b,
-                                k=k, cls=ccls((m, n), (k, n))))
-                    cache.unpin(a)
-                    if local:
-                        cache.unpin(b)
-                dslot = (cache.load(k, k, k, pin=True) if local
-                         else panel_base + k)
-                emits[d](Op(OpKind.TRSM, slot_c=c, slot_a=dslot, k=k,
-                            cls=ccls((k, k), (m, k))))
-                if local and not pin_diag:
-                    cache.unpin(dslot)
-                store(d, m, k, c, k)
-                cache.adopt(m, k, c)
-                cache.unpin(c)
-            elif reuse_accum:  # v1
-                c = naive_load(d, m, k, k, 0)
-                for n in range(k):
-                    a = naive_load(d, m, n, k, 1)
-                    b = (naive_load(d, k, n, k, 2) if local
-                         else panel_base + n)
-                    emits[d](Op(OpKind.GEMM, slot_c=c, slot_a=a, slot_b=b,
-                                k=k, cls=ccls((m, n), (k, n))))
-                dslot = (naive_load(d, k, k, k, 3) if local
-                         else panel_base + k)
-                emits[d](Op(OpKind.TRSM, slot_c=c, slot_a=dslot, k=k,
-                            cls=ccls((k, k), (m, k))))
-                store(d, m, k, c, k)
-            else:  # sync
-                for n in range(k):
-                    c = naive_load(d, m, k, k, 0)
-                    a = naive_load(d, m, n, k, 1)
-                    b = (naive_load(d, k, n, k, 2) if local
-                         else panel_base + n)
-                    emits[d](Op(OpKind.GEMM, slot_c=c, slot_a=a, slot_b=b,
-                                k=k, cls=ccls((m, n), (k, n))))
-                    store(d, m, k, c, k)
-                c = naive_load(d, m, k, k, 0)
-                dslot = (naive_load(d, k, k, k, 1) if local
-                         else panel_base + k)
-                emits[d](Op(OpKind.TRSM, slot_c=c, slot_a=dslot, k=k,
-                            cls=ccls((k, k), (m, k))))
-                store(d, m, k, c, k)
-
-            # --- 4) row-scoped ownership broadcast of the finalized tile ---
-            broadcast_tile(k, m, d)
-
-        if operand_cache and pin_diag:
-            caches[ow].unpin(diag_slot)
+    # stage 1+2 (core/taskgraph.py): explicit task DAG -> topological
+    # lookahead emitter; imported lazily to keep the module cycle one-way
+    from .taskgraph import emit_pipelined_streams
+    streams, dispatch, caches = emit_pipelined_streams(
+        nt, tb, ndev, policy, cache_slots, plan, grid, lookahead)
 
     msched = MultiDeviceSchedule(streams, nt, tb, ndev, policy, cache_slots,
-                                 plan, panel_base=panel_base if ndev > 1
-                                 else -1, grid=grid)
+                                 plan, panel_base=cache_slots if ndev > 1
+                                 else -1, grid=grid, lookahead=lookahead,
+                                 dispatch=dispatch)
     if operand_cache:
         msched.hits = [c.hits for c in caches]
         msched.misses = [c.misses for c in caches]

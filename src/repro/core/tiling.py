@@ -57,6 +57,15 @@ class TileLayout:
         """1D block-cyclic owner of tile-row i (paper Fig. 1b / Fig. 5a)."""
         return i % num_workers
 
+    def panel_slots(self, lookahead: int = 0) -> int:
+        """Device slots the multi-device panel region occupies above the
+        cache: one ``nt``-slot bank per in-flight panel column.  The
+        pipelined emitter rotates ``lookahead + 1`` banks (column ``kc``
+        lands in bank ``kc % (lookahead + 1)``), so ``lookahead=0`` is
+        the classic single ``nt``-slot region.  Used by the tuner's
+        memory feasibility math (``reserve = panel_slots(L)``)."""
+        return (lookahead + 1) * self.nt
+
     def owner_grid(self, i: int, j: int, grid: tuple) -> int:
         """2D block-cyclic owner of tile (i, j) on a ``p x q`` device grid.
 

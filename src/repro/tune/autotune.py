@@ -213,6 +213,11 @@ def _matches_pins(cached: CholeskyConfig, requested: CholeskyConfig,
         # the grid is a searched dimension when open (None); a pinned
         # request must get exactly its layout back
         return False
+    if (requested.lookahead is not None
+            and cached.lookahead != requested.lookahead):
+        # same contract for the pipeline depth: open (None) accepts any
+        # searched winner, a pinned depth must be honoured exactly
+        return False
     if requested.block != cached.block:
         # a non-default block changes the v4 candidates the cached search
         # saw (and a cached v4 winner with another block violates the

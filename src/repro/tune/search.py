@@ -27,6 +27,13 @@ from repro.core.api import _DEFAULT_BLOCK, CholeskyConfig
 from repro.core.precision import PrecisionPlan, uniform_plan
 from repro.core.schedule import (build_multidevice_schedule, build_schedule,
                                  default_cache_slots, min_cache_slots)
+from repro.core.tiling import TileLayout
+
+# lookahead depths worth scoring (ndev > 1): 0 is today's column loop,
+# deeper pipelines trade panel slots for overlap; past 2 the emitter's
+# extra in-flight panels stop changing the simulated makespan on every
+# preset we model (the panel critical path is already hidden)
+_LOOKAHEADS = (0, 1, 2)
 
 # search-space bounds: nt below 2 is in-core (no schedule to tune), nt
 # above NT_MAX makes candidate *scoring* itself the bottleneck (schedule
@@ -60,6 +67,7 @@ class Candidate:
             "tb": c.tb, "policy": c.policy, "cache_slots": c.cache_slots,
             "ndev": c.ndev,
             "grid": list(c.grid) if c.grid else [c.ndev, 1],
+            "lookahead": c.lookahead or 0,
             "makespan_s": self.makespan,
             "tflops": self.tflops, "loads_bytes": self.loads_bytes,
             "stores_bytes": self.stores_bytes,
@@ -102,7 +110,7 @@ def feasible_tbs(n: int, hw: HardwareModel, ndev: int = 1,
         tb = n // nt
         if tb < TB_MIN:
             break
-        reserve = nt if ndev > 1 else 0
+        reserve = TileLayout(n, tb).panel_slots(0) if ndev > 1 else 0
         least = min(min_cache_slots(p) for p in policies)
         if hw.max_cache_slots(tb, reserve) >= least:
             out.append(tb)
@@ -110,26 +118,31 @@ def feasible_tbs(n: int, hw: HardwareModel, ndev: int = 1,
 
 
 def slot_candidates(policy: str, nt: int, tb: int, hw: HardwareModel,
-                    ndev: int = 1, block: tuple = (4, 4)) -> list[int]:
+                    ndev: int = 1, block: tuple = (4, 4),
+                    lookahead: int = 0) -> list[int]:
     """Feasible cache-slot budgets worth scoring for one (policy, tb).
 
     Three probes bound the interesting range: the policy minimum (the
     thrash-iest feasible point), the builder default, and the
     memory-capped maximum (cache as much as the device holds).  Slot
     counts only change the op stream for the cache-table policies; the
-    fixed-slot policies get their single minimum.
+    fixed-slot policies get their single minimum.  ``lookahead`` lifts
+    both the minimum (one extra pinned slot per depth) and the panel
+    reserve (one extra ``nt``-slot bank per in-flight panel).
     """
-    reserve = nt if ndev > 1 else 0
+    reserve = (TileLayout(nt * tb, tb).panel_slots(lookahead)
+               if ndev > 1 else 0)
     cap = hw.max_cache_slots(tb, reserve)
-    mn = min_cache_slots(policy, block)
+    mn = min_cache_slots(policy, block, lookahead)
     if cap < mn:
         return []
     if policy in ("sync", "async", "v1"):
         return [mn]
-    default = default_cache_slots(policy, nt, block, multidevice=ndev > 1)
+    default = default_cache_slots(policy, nt, block, multidevice=ndev > 1,
+                                  lookahead=lookahead)
     # nt*(nt+1)//2 + 1 slots hold every lower tile at once: beyond that,
     # extra slots cannot change a single cache decision
-    useful_max = min(cap, nt * (nt + 1) // 2 + 1)
+    useful_max = min(cap, nt * (nt + 1) // 2 + 1 + lookahead)
     return sorted({max(s, mn) for s in (mn, min(default, cap), useful_max)})
 
 
@@ -138,18 +151,23 @@ def is_feasible(n: int, config: CholeskyConfig, hw: HardwareModel) -> bool:
     if config.tb < 1 or n % config.tb:
         return False
     nt = n // config.tb
-    if config.cache_slots < min_cache_slots(config.policy, config.block):
+    la = config.lookahead or 0
+    if la >= nt:
         return False
-    reserve = nt if config.ndev > 1 else 0
+    if config.cache_slots < min_cache_slots(config.policy, config.block, la):
+        return False
+    reserve = (TileLayout(n, config.tb).panel_slots(la)
+               if config.ndev > 1 else 0)
     return config.cache_slots <= hw.max_cache_slots(config.tb, reserve)
 
 
 def _score(n, tb, policy, slots, pplan, ndev, hw, base: CholeskyConfig,
-           grid=None):
+           grid=None, lookahead=0):
     nt = n // tb
     if ndev > 1:
         msched = build_multidevice_schedule(nt, tb, ndev, policy, slots,
-                                            pplan, grid=grid)
+                                            pplan, grid=grid,
+                                            lookahead=lookahead)
         r = simulate_multi(msched, hw)
         loads, stores = msched.loads_bytes(), msched.stores_bytes()
         link = r.link_bytes
@@ -164,6 +182,9 @@ def _score(n, tb, policy, slots, pplan, ndev, hw, base: CholeskyConfig,
     cfg = dataclasses.replace(
         base, tb=tb, policy=policy, cache_slots=slots, ndev=ndev,
         grid=grid if ndev > 1 else None,
+        # the winner pins the searched depth (0 included) so a db
+        # round-trip replays the same schedule; ndev=1 has no pipeline
+        lookahead=lookahead if ndev > 1 else None,
         # a custom v4 block must not ride along into non-v4 candidates
         block=base.block if policy == "v4" else _DEFAULT_BLOCK,
         plan=pplan if pplan is not None and not _is_uniform_f64(pplan)
@@ -190,10 +211,12 @@ def score_config(n: int, config: CholeskyConfig,
         raise ValueError(f"tb={config.tb} does not tile n={n}")
     nt = n // config.tb
     slots = config.cache_slots or default_cache_slots(
-        config.policy, nt, config.block, multidevice=config.ndev > 1)
+        config.policy, nt, config.block, multidevice=config.ndev > 1,
+        lookahead=config.lookahead or 0)
     pplan = config.plan or uniform_plan(nt, "f64", config.ladder)
     return _score(n, config.tb, config.policy, slots, pplan, config.ndev,
-                  hw, config, grid=config.grid)
+                  hw, config, grid=config.grid,
+                  lookahead=config.lookahead or 0)
 
 
 def search(n: int,
@@ -207,15 +230,16 @@ def search(n: int,
     open: ``tb=0`` searches tile sizes, ``policy="auto"`` searches
     policies, ``cache_slots=0`` searches slot budgets, and (for
     ``ndev > 1``) ``grid=None`` searches every ``(p, q)`` factorization
-    of ``ndev``; a concrete value freezes that axis.  ``plans_by_tb``
+    of ``ndev`` while ``lookahead=None`` searches pipeline depths
+    ``{0, 1, 2}``; a concrete value freezes that axis.  ``plans_by_tb``
     optionally maps tile size -> :class:`PrecisionPlan` (built from a
     representative matrix by :func:`repro.tune.tune`) to score
     mixed-precision candidates; absent entries score uniform f64.
 
     Deterministic by construction: candidates are scored by an exact
     event simulation and ranked by ``(makespan, fewer bytes, policy
-    order, larger tb, fewer slots, grid)`` — equal inputs always return
-    the identical ranking.
+    order, larger tb, fewer slots, shallower lookahead, grid)`` — equal
+    inputs always return the identical ranking.
     """
     base = config if config is not None else CholeskyConfig(
         tb=0, policy="auto")
@@ -262,6 +286,13 @@ def search(n: int,
         # tile-row layout (ndev, 1) among them
         grids = [(d, ndev // d) for d in range(1, ndev + 1) if ndev % d == 0]
 
+    if ndev == 1:
+        lookaheads = [0]
+    elif base.lookahead is not None:
+        lookaheads = [base.lookahead]
+    else:
+        lookaheads = list(_LOOKAHEADS)
+
     candidates = []
     for tb in tbs:
         nt = n // tb
@@ -272,24 +303,31 @@ def search(n: int,
         else:
             pplan = uniform_plan(nt, "f64", base.ladder)
         for policy in policies:
-            if base.cache_slots > 0:
-                # primitive feasibility probe: constructing a config here
-                # would re-run eager validation and *raise* on the very
-                # combinations this filter exists to skip (e.g. a pinned
-                # budget below v4's minimum while policy="auto")
-                blk = base.block if policy == "v4" else _DEFAULT_BLOCK
-                reserve = nt if ndev > 1 else 0
-                ok = (base.cache_slots >= min_cache_slots(policy, blk)
-                      and base.cache_slots <= hw.max_cache_slots(tb, reserve))
-                slot_opts = [base.cache_slots] if ok else []
-            else:
-                slot_opts = slot_candidates(policy, nt, tb, hw, ndev,
-                                            base.block)
-            for slots in slot_opts:
-                for grid in grids:
-                    candidates.append(
-                        _score(n, tb, policy, slots, pplan, ndev, hw,
-                               base, grid=grid))
+            for la in lookaheads:
+                if la >= nt:
+                    continue        # the builder rejects lookahead >= nt
+                if base.cache_slots > 0:
+                    # primitive feasibility probe: constructing a config
+                    # here would re-run eager validation and *raise* on
+                    # the very combinations this filter exists to skip
+                    # (e.g. a pinned budget below v4's minimum while
+                    # policy="auto")
+                    blk = base.block if policy == "v4" else _DEFAULT_BLOCK
+                    reserve = (TileLayout(n, tb).panel_slots(la)
+                               if ndev > 1 else 0)
+                    ok = (base.cache_slots
+                          >= min_cache_slots(policy, blk, la)
+                          and base.cache_slots
+                          <= hw.max_cache_slots(tb, reserve))
+                    slot_opts = [base.cache_slots] if ok else []
+                else:
+                    slot_opts = slot_candidates(policy, nt, tb, hw, ndev,
+                                                base.block, lookahead=la)
+                for slots in slot_opts:
+                    for grid in grids:
+                        candidates.append(
+                            _score(n, tb, policy, slots, pplan, ndev, hw,
+                                   base, grid=grid, lookahead=la))
     if not candidates:
         raise ValueError(
             f"no feasible (policy, cache_slots) candidate for n={n} on "
@@ -301,6 +339,7 @@ def search(n: int,
         _POLICY_RANK[c.config.policy],
         -c.config.tb,
         c.config.cache_slots,
+        c.config.lookahead or 0,     # shallower pipeline on ties
         c.config.grid or (c.config.ndev, 1),
     ))
     return TuneResult(n=n, ndev=ndev, hw=hw, candidates=candidates,

@@ -1,0 +1,241 @@
+"""Lookahead pipelined-panel schedules (PR 6): the task-DAG emitter.
+
+Three contracts pin the refactor:
+
+1. **Bit-identity at lookahead=0** — the two-stage (DAG -> topological
+   emitter) builder must reproduce the old per-column emission loop's
+   streams *exactly*, op for op, for every policy x ndev x grid.  The
+   golden digests in test_golden_schedule.py pin the absolute history;
+   here the property is checked structurally (explicit ``lookahead=0``
+   == default build) so a future digest regen can't silently drop it.
+
+2. **DAG safety at every depth** — ``verify_dispatch`` symbolically
+   replays the dispatch order and asserts no POTRF/TRSM/SYRK/GEMM
+   consumes a tile before its task-DAG predecessors completed, that
+   broadcasts only ship finalized panel tiles, and that the full DAG is
+   covered.  This is the simulator invariant that catches emitter
+   reordering bugs.
+
+3. **Numerics** — the NumPy oracle replay of a pipelined schedule still
+   equals LAPACK (the jax executor legs live in
+   test_backend_equivalence.py under forced host devices).
+
+Plus the knob surface: slot minimums (each depth pins one extra slot),
+digest folding (lookahead>0 distinct, lookahead=0 unchanged), the tuner
+dimension (enumerated when open, honored when pinned), and the db
+round-trip.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.analytics import HW, simulate_multi
+from repro.core.api import CholeskyConfig
+from repro.core.cholesky import run_multidevice_numpy
+from repro.core.precision import assign_precision
+from repro.core.schedule import (build_multidevice_schedule,
+                                 default_cache_slots, min_cache_slots)
+from repro.core.taskgraph import (build_task_dag, potrf, syrk, trsm,
+                                  verify_dispatch)
+from repro.core.tiling import TileLayout, from_tiles, random_spd, to_tiles
+
+POLICIES = ("sync", "v1", "v2", "v3")
+
+
+def _plan(nt):
+    norms = np.fromfunction(
+        lambda i, j: 0.25 + ((3 * i + 5 * j) % 7) / 7.0, (nt, nt))
+    dist = np.fromfunction(lambda i, j: np.minimum(abs(i - j), 4.0), (nt, nt))
+    norms = norms * (1e-2 ** dist)
+    norms[np.diag_indices(nt)] = 10.0
+    return assign_precision(norms, float(np.sqrt((norms ** 2).sum())), 1e-6)
+
+
+# -- 1. lookahead=0 bit-identity --------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("ndev,grid", [(1, None), (2, None), (4, None),
+                                       (4, (2, 2)), (4, (1, 4))])
+def test_lookahead0_streams_bit_identical(policy, ndev, grid):
+    nt = 8
+    plan = _plan(nt)
+    base = build_multidevice_schedule(nt, 16, ndev, policy, plan=plan,
+                                      grid=grid)
+    explicit = build_multidevice_schedule(nt, 16, ndev, policy, plan=plan,
+                                          grid=grid, lookahead=0)
+    assert explicit.streams == base.streams
+    assert explicit.digest() == base.digest()
+    assert explicit.lookahead == 0 and explicit.dispatch is None
+
+
+# -- 2. the DAG-safety invariant --------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("ndev,grid", [(2, None), (4, None), (4, (2, 2))])
+@pytest.mark.parametrize("lookahead", [0, 1, 2])
+def test_dispatch_respects_task_dag(policy, ndev, grid, lookahead):
+    nt = 10
+    m = build_multidevice_schedule(nt, 16, ndev, policy, plan=_plan(nt),
+                                   grid=grid, lookahead=lookahead)
+    # every POTRF/TRSM/SYRK/GEMM of the nt-column factorization replayed,
+    # each after its predecessors — verify_dispatch raises otherwise
+    assert verify_dispatch(m) == len(build_task_dag(nt).preds)
+
+
+def test_task_dag_rejects_out_of_order():
+    dag = build_task_dag(3)
+    with pytest.raises(AssertionError):
+        dag.complete(potrf(1))          # needs syrk(1, 0) first
+    dag.complete(potrf(0))
+    with pytest.raises(AssertionError):
+        dag.complete(potrf(0))          # double-run
+    with pytest.raises(AssertionError):
+        dag.complete(syrk(1, 0))        # needs trsm(1, 0) first
+    dag.complete(trsm(1, 0))
+    dag.complete(syrk(1, 0))
+    dag.complete(potrf(1))              # now legal
+    assert not dag.all_done()
+
+
+def test_dag_shape():
+    dag = build_task_dag(4)
+    # 4 potrf + 6 trsm + 6 syrk + 4 gemm(m,k,n) chains for nt=4
+    kinds = {}
+    for t in dag.preds:
+        kinds[t.kind] = kinds.get(t.kind, 0) + 1
+    assert kinds["potrf"] == 4
+    assert kinds["trsm"] == 6
+    assert kinds["syrk"] == 6
+    assert kinds["gemm"] == 4
+
+
+def test_dispatch_chunks_cover_streams():
+    for lookahead in (0, 2):
+        m = build_multidevice_schedule(8, 16, 4, "v3", plan=_plan(8),
+                                       grid=(2, 2), lookahead=lookahead)
+        seen = [0] * m.ndev
+        for d, start, stop, _k, phase in m.dispatch_chunks():
+            assert start == seen[d], "chunks must tile each stream in order"
+            assert phase in ("panel", "update", "recv", "recv-ahead",
+                             "push", "advance")
+            seen[d] = stop
+        assert seen == [len(s) for s in m.streams]
+
+
+# -- 3. numerics of pipelined schedules -------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("grid", [(4, 1), (2, 2)])
+@pytest.mark.parametrize("lookahead", [1, 2])
+def test_numpy_replay_matches_lapack(policy, grid, lookahead):
+    n, tb = 128, 16
+    a = random_spd(n, seed=3)
+    m = build_multidevice_schedule(n // tb, tb, 4, policy, grid=grid,
+                                   lookahead=lookahead)
+    assert m.lookahead == lookahead and m.dispatch is not None
+    l = np.tril(from_tiles(run_multidevice_numpy(to_tiles(a, tb), m)))
+    assert np.abs(l - np.linalg.cholesky(a)).max() < 1e-10
+
+
+# -- digests, slots, validation ---------------------------------------------
+
+def test_digest_folds_lookahead():
+    plan = _plan(8)
+    digs = [build_multidevice_schedule(8, 16, 4, "v3", plan=plan,
+                                       grid=(2, 2), lookahead=la).digest()
+            for la in (0, 1, 2)]
+    assert len(set(digs)) == 3
+    # and deterministically
+    again = build_multidevice_schedule(8, 16, 4, "v3", plan=plan,
+                                       grid=(2, 2), lookahead=2).digest()
+    assert again == digs[2]
+
+
+def test_slot_minimums_scale_with_depth():
+    for policy in POLICIES:
+        base = min_cache_slots(policy)
+        for la in (1, 2, 3):
+            assert min_cache_slots(policy, lookahead=la) == base + la
+    assert (default_cache_slots("v3", 8, multidevice=True, lookahead=2)
+            == default_cache_slots("v3", 8, multidevice=True) + 2)
+    assert TileLayout(128, 16).panel_slots(2) == 3 * 8
+
+
+def test_builder_validation():
+    with pytest.raises(ValueError, match="lookahead"):
+        build_multidevice_schedule(8, 16, 4, "v3", lookahead=8)   # >= nt
+    with pytest.raises(ValueError, match="lookahead"):
+        build_multidevice_schedule(8, 16, 1, "v3", lookahead=1)   # ndev=1
+    with pytest.raises(ValueError, match="cache slots"):
+        build_multidevice_schedule(8, 16, 4, "v3", cache_slots=4,
+                                   lookahead=2)                   # < 4+2
+    m = build_multidevice_schedule(8, 16, 4, "v3", cache_slots=6,
+                                   lookahead=2)
+    assert m.panel_base == 6
+
+
+def test_config_validation_and_plan_threading():
+    with pytest.raises(ValueError, match="ndev"):
+        CholeskyConfig(tb=16, lookahead=1)
+    with pytest.raises(ValueError, match="lookahead"):
+        CholeskyConfig(tb=16, ndev=4, lookahead=-1)
+    with pytest.raises(ValueError, match="cache slots"):
+        CholeskyConfig(tb=16, ndev=4, policy="v3", cache_slots=4,
+                       lookahead=2)
+    p = repro.plan(128, CholeskyConfig(tb=16, ndev=4, grid=(2, 2),
+                                       lookahead=2, backend="numpy"))
+    assert p.schedule.lookahead == 2
+    # lookahead=0 canonicalizes to the default plan-cache entry
+    p0 = repro.plan(128, CholeskyConfig(tb=16, ndev=4, grid=(2, 2),
+                                        lookahead=0, backend="numpy"))
+    pn = repro.plan(128, CholeskyConfig(tb=16, ndev=4, grid=(2, 2),
+                                        backend="numpy"))
+    assert p0 is pn
+
+
+# -- tuner dimension + db round-trip ----------------------------------------
+
+def test_search_enumerates_open_lookahead():
+    from repro.tune.search import search
+    res = search(256, HW["gh200"], CholeskyConfig(
+        tb=32, policy="v3", ndev=4, backend="numpy"))
+    las = {r["lookahead"] for r in res.table()}
+    assert las == {0, 1, 2}
+    # the winner pins what it searched (plan()/db replay the same depth)
+    assert res.config.lookahead is not None
+
+
+def test_search_honors_pinned_lookahead():
+    from repro.tune.search import search
+    res = search(256, HW["gh200"], CholeskyConfig(
+        tb=32, policy="v3", ndev=4, lookahead=1, backend="numpy"))
+    assert {r["lookahead"] for r in res.table()} == {1}
+    assert all(c.config.lookahead == 1 for c in res.candidates)
+
+
+def test_pipelined_2x2_wins_compute_bound_model():
+    """The PR 6 acceptance mechanism at test scale: on the compute-bound
+    gh200 model the pipelined (2, 2) beats its own lookahead=0 schedule
+    (fig9 records the full (2,2)-vs-(4,1) win at benchmark scale)."""
+    nt, tb = 16, 512
+    base = simulate_multi(build_multidevice_schedule(
+        nt, tb, 4, "v3", grid=(2, 2)), HW["gh200"])
+    piped = simulate_multi(build_multidevice_schedule(
+        nt, tb, 4, "v3", grid=(2, 2), lookahead=2), HW["gh200"])
+    assert piped.makespan < base.makespan
+
+
+def test_db_roundtrip_and_pin_matching():
+    from repro.tune.autotune import _matches_pins
+    from repro.tune.db import config_from_dict, config_to_dict
+    cfg = CholeskyConfig(tb=32, policy="v3", ndev=4, grid=(2, 2),
+                         lookahead=2)
+    assert config_from_dict(config_to_dict(cfg)) == cfg
+    open_req = CholeskyConfig(tb=0, policy="auto", ndev=4)
+    assert _matches_pins(cfg, open_req, 256)          # open accepts any
+    pinned = dataclasses.replace(open_req, lookahead=1)
+    assert not _matches_pins(cfg, pinned, 256)        # wrong depth
+    assert _matches_pins(cfg, dataclasses.replace(open_req, lookahead=2),
+                         256)
