@@ -1,0 +1,160 @@
+"""Serving throughput: sustained solves/sec + tail latency under load.
+
+The first benchmark in the repo whose metric is *throughput of a request
+stream*, not one factorization's makespan — the regime the ROADMAP's
+"millions of users" north star cares about.  The workload is the
+paper's motivating application: geospatial Matérn MLE tenants, each
+holding a factored covariance and fanning out correlated
+likelihood-style solves (``repro.geo.likelihood`` drives the session
+handles directly).
+
+Two phases:
+
+* **MLE traffic** — ``TENANTS`` concurrent sessions factor their own
+  Matérn covariance through the shared plan cache, then evaluate
+  stacked observation log-likelihoods; checks the served numbers equal
+  the serial solver's.
+* **Open-loop load** — a fixed burst of single-RHS solve requests per
+  tenant is pushed through (a) a batching service and (b) the identical
+  service with batching disabled (the one-RHS-at-a-time baseline).
+  Open loop: arrivals are scripted up front, never gated on
+  completions, so queueing delay lands in the latency percentiles
+  instead of silently throttling the offered load.  Asserts the batched
+  service coalesced at least one multi-RHS solve and sustained strictly
+  more solves/sec than the baseline under the same load.
+
+Emits p50/p99/mean latency, solves/sec, batch occupancy, plan-cache and
+solver-reuse counters into ``benchmarks/out/BENCH_serve.json`` (via
+``benchmarks.run serve``).
+"""
+import threading
+
+import numpy as np
+
+import repro
+from repro.geo.likelihood import gaussian_loglik
+from repro.geo.matern import generate_locations, matern_covariance
+from repro.serve import SolverService
+
+N = 192          # per-tenant problem size (nt=6 at tb=32: OOC-shaped,
+TB = 32          #   but small enough for the CI gate)
+TENANTS = 4
+SOLVES_PER_TENANT = 120
+WORKERS = 2
+OBS_STACK = 8    # stacked observations per likelihood evaluation
+
+
+def _covariances():
+    covs = []
+    for t in range(TENANTS):
+        locs = generate_locations(N, seed=t)
+        covs.append(matern_covariance(locs, beta=0.1, nu=0.5))
+    return covs
+
+
+def _config():
+    # the numpy backend keeps the gate portable; the serve layer is
+    # backend-agnostic (workers call the same OOCSolver surface)
+    return repro.CholeskyConfig(tb=TB, policy="v3", backend="numpy")
+
+
+def _mle_phase(out, covs, rng):
+    """Concurrent tenants evaluating stacked observation log-likelihoods
+    through served sessions; cross-checked against serial solvers."""
+    cfg = _config()
+    ys = [rng.standard_normal((N, OBS_STACK)) for _ in range(TENANTS)]
+
+    serial = []
+    for t in range(TENANTS):
+        sv = repro.plan(N, cfg).compile()
+        sv.factor(covs[t], materialize=False)
+        serial.append(gaussian_loglik(sv, ys[t]))
+
+    with SolverService(workers=WORKERS) as svc:
+        sessions = [svc.session(f"tenant{t}", N, cfg)
+                    for t in range(TENANTS)]
+        errs = []
+
+        def tenant(t):
+            try:
+                s = sessions[t]
+                s.factor(covs[t])
+                ll = gaussian_loglik(s, ys[t])     # session duck-types
+                if not np.allclose(ll, serial[t], rtol=0, atol=1e-9):
+                    raise AssertionError(
+                        f"tenant {t} loglik mismatch: {ll} vs {serial[t]}")
+            except Exception as e:  # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=tenant, args=(t,))
+                   for t in range(TENANTS)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if errs:
+            raise errs[0]
+        snap = svc.metrics.snapshot()
+    out(f"[mle] {TENANTS} tenants x {OBS_STACK} stacked obs: "
+        f"plan-cache hits={snap['plan_cache']['hits']} "
+        f"misses={snap['plan_cache']['misses']}, "
+        f"solver compiles={snap['solver']['compiles']}")
+    return {"tenants": TENANTS, "obs_stack": OBS_STACK,
+            "plan_cache": snap["plan_cache"],
+            "solver": snap["solver"]}
+
+
+def _load_phase(out, covs, rng, batch_window, max_batch, label):
+    """Open-loop burst: every request scripted up front, submitted
+    without waiting on completions; drain and report."""
+    cfg = _config()
+    rhss = [[rng.standard_normal(N) for _ in range(SOLVES_PER_TENANT)]
+            for _ in range(TENANTS)]
+    with SolverService(workers=WORKERS, batch_window=batch_window,
+                       max_batch=max_batch) as svc:
+        sessions = [svc.session(f"tenant{t}", N, cfg)
+                    for t in range(TENANTS)]
+        for t, s in enumerate(sessions):
+            s.factor(covs[t])
+        futs = [s.solve_async(b)
+                for t, s in enumerate(sessions) for b in rhss[t]]
+        for f in futs:
+            f.result(timeout=300)
+        snap = svc.metrics.snapshot()
+    out(f"[{label}] {len(futs)} solves: {snap['solves_per_s']:.0f}/s, "
+        f"p50 {snap['latency_s']['p50']*1e3:.1f} ms, "
+        f"p99 {snap['latency_s']['p99']*1e3:.1f} ms, "
+        f"max batch occupancy {snap['batch']['max_occupancy']}")
+    return snap
+
+
+def run(out):
+    out("== serve: open-loop factor/solve serving throughput ==")
+    rng = np.random.default_rng(7)
+    covs = _covariances()
+    repro.clear_plan_cache()
+
+    mle = _mle_phase(out, covs, rng)
+    baseline = _load_phase(out, covs, rng, batch_window=0.0, max_batch=1,
+                           label="1-rhs baseline")
+    batched = _load_phase(out, covs, rng, batch_window=0.004, max_batch=32,
+                          label="batched")
+
+    assert batched["batch"]["max_occupancy"] >= 2, \
+        "no multi-RHS batch occurred under the open-loop load"
+    assert batched["solves_per_s"] > baseline["solves_per_s"], (
+        f"batched serving ({batched['solves_per_s']:.0f} solves/s) did not "
+        f"beat the one-RHS-at-a-time baseline "
+        f"({baseline['solves_per_s']:.0f} solves/s)")
+    speedup = batched["solves_per_s"] / max(baseline["solves_per_s"], 1e-12)
+    out(f"[serve] batching speedup {speedup:.2f}x "
+        f"({baseline['solves_per_s']:.0f} -> "
+        f"{batched['solves_per_s']:.0f} solves/s)")
+    return {
+        "n": N, "tb": TB, "tenants": TENANTS, "workers": WORKERS,
+        "solves_per_tenant": SOLVES_PER_TENANT,
+        "mle": mle,
+        "baseline": baseline,
+        "batched": batched,
+        "batching_speedup": speedup,
+    }

@@ -33,8 +33,15 @@ task DAG (:mod:`repro.core.taskgraph`) by a topological emitter;
 ``CholeskyConfig(ndev=4, grid=(2, 2), lookahead=2)`` interleaves up to
 ``lookahead`` panel columns ahead of the trailing update with eager
 peer pushes, closing the 2D grid's compute-bound makespan gap (the
-tuner searches the depth when it is left open).  The ``docs/`` tree
-(architecture, schedule-format, multidevice, tuning) is the narrative
+tuner searches the depth when it is left open).
+
+Serving (0.7): :mod:`repro.serve` puts a concurrent front end on the
+plan cache — ``SolverService`` admits mixed factor/solve/logdet traffic
+from many tenants, pools per-session solvers over shared plans, batches
+concurrent single-RHS solves into stacked multi-RHS sweeps, and
+schedules device memory across tenants; ``solve(B)`` itself now takes
+``(n, k)`` stacked right-hand sides.  The ``docs/`` tree (architecture,
+schedule-format, multidevice, tuning, serving) is the narrative
 documentation; its code blocks are executed by CI.
 """
 from repro.core.analytics import (HW, HardwareModel, ascii_trace,
@@ -42,7 +49,7 @@ from repro.core.analytics import (HW, HardwareModel, ascii_trace,
                                   simulate, simulate_multi, volume_report,
                                   volume_report_multi)
 from repro.core.api import (CholeskyConfig, CholeskyPlan, OOCSolver,
-                            clear_plan_cache, plan)
+                            clear_plan_cache, plan, plan_cache_stats)
 from repro.core.cholesky import (MultiDeviceJaxExecutor,
                                  make_multidevice_jax_executor, ooc_cholesky,
                                  plan_for_matrix)
@@ -52,14 +59,16 @@ from repro.core.schedule import (MultiDeviceSchedule, Op, OpKind, Schedule,
                                  build_multidevice_schedule, build_schedule)
 from repro.core.taskgraph import build_task_dag, verify_dispatch
 from repro.core.tiling import TileLayout, from_tiles, random_spd, to_tiles
-from repro import tune
+from repro import serve, tune
+from repro.serve import SolverService
 
-__version__ = "0.6.0"
+__version__ = "0.7.0"
 
 __all__ = [
     "__version__",
     # planner/executor API
     "CholeskyConfig", "CholeskyPlan", "OOCSolver", "plan", "clear_plan_cache",
+    "plan_cache_stats",
     # executors
     "MultiDeviceJaxExecutor", "make_multidevice_jax_executor",
     # one-shot shim + precision planning
@@ -75,6 +84,8 @@ __all__ = [
     "crosscheck_executed_volume",
     # autotuner
     "tune",
+    # serving
+    "serve", "SolverService",
     # tiling
     "TileLayout", "to_tiles", "from_tiles", "random_spd",
 ]

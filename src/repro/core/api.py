@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 from typing import Any, Optional
 
 import numpy as np
@@ -340,6 +341,13 @@ class OOCSolver:
         ``solve()``/``solve_lower()``/``logdet()`` consume it.  That is
         the out-of-core mode: at OOC scale the dense L is exactly the
         object that does not fit.
+
+        A solver holds exactly **one** factor: each ``factor()`` call
+        *overwrites* the previous tile store, so pending ``solve()``
+        calls against the old matrix must complete first.  This
+        single-factor statefulness is why :class:`repro.serve`'s service
+        pools one solver per session instead of sharing one solver
+        across tenants.
         """
         a = np.asarray(a, dtype=np.float64)
         if a.shape != (self.n, self.n):
@@ -374,17 +382,46 @@ class OOCSolver:
                                "solve()/solve_lower()/logdet()")
         return self._tiles
 
+    def _check_rhs(self, b) -> np.ndarray:
+        """Eager rhs validation: reject shape/dtype mismatches with a
+        plan-aware error instead of letting them fall through to the
+        blocked-substitution internals."""
+        b = np.asarray(b)
+        if b.dtype.kind not in "fiub":
+            raise TypeError(
+                f"rhs dtype {b.dtype} is not real-valued; the tiled "
+                f"substitution runs in float64")
+        if b.ndim not in (1, 2):
+            raise ValueError(
+                f"rhs must be a vector (n,) or stacked columns (n, k), "
+                f"got shape {b.shape}")
+        if b.shape[0] != self.n:
+            raise ValueError(
+                f"rhs has {b.shape[0]} rows but this solver's plan is "
+                f"n={self.n}; build a plan for the rhs size or reshape")
+        if b.ndim == 2 and b.shape[1] == 0:
+            raise ValueError("rhs has 0 columns; nothing to solve")
+        return np.asarray(b, dtype=np.float64)
+
     def solve(self, b: np.ndarray) -> np.ndarray:
-        """Solve ``A x = b`` with the last factored ``A = L L^T``."""
+        """Solve ``A x = b`` with the last factored ``A = L L^T``.
+
+        ``b`` may be one vector ``(n,)`` or ``k`` stacked columns
+        ``(n, k)`` — the blocked substitution sweeps the tile store once
+        for the whole stack, which is what the serve batcher exploits
+        to coalesce concurrent single-RHS solves.  The result is
+        against this solver's *current* factor (see :meth:`factor`)."""
         from .solve import cho_solve_tiles
-        x = cho_solve_tiles(self._factored_tiles(), b)
+        x = cho_solve_tiles(self._factored_tiles(), self._check_rhs(b))
         self._solve_calls += 1
         return x
 
     def solve_lower(self, b: np.ndarray) -> np.ndarray:
-        """Forward substitution ``L z = b`` (e.g. Gaussian quad forms)."""
+        """Forward substitution ``L z = b`` (e.g. Gaussian quad forms);
+        like :meth:`solve`, accepts one vector or ``(n, k)`` stacked
+        columns against the current factor."""
         from .solve import solve_lower_tiles
-        z = solve_lower_tiles(self._factored_tiles(), b)
+        z = solve_lower_tiles(self._factored_tiles(), self._check_rhs(b))
         self._solve_calls += 1
         return z
 
@@ -469,6 +506,8 @@ class CholeskyPlan:
     schedule: MultiDeviceSchedule
     _single: Any = None            # single-device Schedule (ndev=1 only)
     _executor: Optional[_CompiledExecutor] = None
+    _compile_lock: Any = dataclasses.field(default_factory=threading.Lock,
+                                           repr=False, compare=False)
 
     def single_schedule(self):
         """The flat single-device Schedule backing the ndev=1 degenerate."""
@@ -483,11 +522,14 @@ class CholeskyPlan:
         (rebuilt only if the jax x64 flag changed the compute dtype in
         the meantime); the solver itself is new each time so factored
         state stays with the call site that produced it (and is freed
-        with it — the plan cache never pins a factored matrix)."""
-        if (self._executor is None
-                or self._executor.dtype != _resolved_dtype(self.config)):
-            self._executor = _CompiledExecutor(self)
-        return OOCSolver(self, self._executor)
+        with it — the plan cache never pins a factored matrix).  The
+        per-plan lock makes concurrent first compiles (serve workers
+        racing for a shared plan) build exactly one executor."""
+        with self._compile_lock:
+            if (self._executor is None
+                    or self._executor.dtype != _resolved_dtype(self.config)):
+                self._executor = _CompiledExecutor(self)
+            return OOCSolver(self, self._executor)
 
     def simulate(self, hw, link_bw=None, record_timeline: bool = False):
         """Three-engine event model (per-device + shared link for ndev>1)."""
@@ -510,15 +552,38 @@ class CholeskyPlan:
 _PLAN_CACHE: "collections.OrderedDict[tuple, CholeskyPlan]" = \
     collections.OrderedDict()
 _PLAN_CACHE_MAX = 32
+# One lock for every cache mutation *and* the build of a missing plan:
+# concurrent plan() calls from serve workers must neither corrupt the
+# OrderedDict (move_to_end/popitem race) nor duplicate a build — with
+# the lock held across the miss path, N threads planning the same
+# (n, config) produce exactly one schedule and share one CholeskyPlan
+# (and therefore one jitted executor).  Reentrant because the tuner
+# resolution path may consult planning helpers.
+_PLAN_CACHE_LOCK = threading.RLock()
 _SCHEDULE_BUILDS = 0     # module-wide build counter (amortization tests)
+_PLAN_CACHE_HITS = 0     # served from cache (serve metrics read these)
+_PLAN_CACHE_MISSES = 0   # built fresh
 
 
 def schedule_build_count() -> int:
     return _SCHEDULE_BUILDS
 
 
+def plan_cache_stats() -> dict:
+    """Hit/miss/occupancy counters of the process-wide plan cache.
+
+    ``hits``/``misses`` are cumulative since import (a miss is a fresh
+    schedule build); ``size``/``max`` describe current occupancy.  The
+    serve metrics layer snapshots this around a traffic window to report
+    the cache's contribution to request latency."""
+    with _PLAN_CACHE_LOCK:
+        return {"hits": _PLAN_CACHE_HITS, "misses": _PLAN_CACHE_MISSES,
+                "size": len(_PLAN_CACHE), "max": _PLAN_CACHE_MAX}
+
+
 def clear_plan_cache() -> None:
-    _PLAN_CACHE.clear()
+    with _PLAN_CACHE_LOCK:
+        _PLAN_CACHE.clear()
 
 
 def plan(n: int, config: CholeskyConfig | None = None,
@@ -539,7 +604,7 @@ def plan(n: int, config: CholeskyConfig | None = None,
     precision plan depends on the matrix values.  See
     docs/architecture.md for the full planner/executor walkthrough.
     """
-    global _SCHEDULE_BUILDS
+    global _SCHEDULE_BUILDS, _PLAN_CACHE_HITS, _PLAN_CACHE_MISSES
     if config is None:
         config = CholeskyConfig(**overrides)
     elif overrides:
@@ -550,59 +615,66 @@ def plan(n: int, config: CholeskyConfig | None = None,
             "cannot be planned ahead of the data: freeze it with "
             "config.specialize(a) (or pass plan=plan_for_matrix(...)), or "
             "use the one-shot ooc_cholesky()")
-    auto_key = None
-    if config.needs_tuning:
-        # open dimensions (tb=0 / policy="auto"): resolve through the
-        # autotuner — exact-simulation search against the config's hw
-        # preset (or the process default model), memoized in the tuning
-        # db.  The plan is cached under the auto key too, so repeat
-        # plan() calls with the same auto config skip even the db hit;
-        # the key carries the resolving model's identity, so installing
-        # a different default hardware model re-resolves instead of
-        # serving a plan tuned for the previous one.
-        from repro.tune import resolve_config, resolution_token
-        auto_key = (n, config, resolution_token(config))
-        cached = _PLAN_CACHE.get(auto_key)
+    # the lock spans lookup *and* build: concurrent misses on one key
+    # collapse to a single schedule construction (see _PLAN_CACHE_LOCK)
+    with _PLAN_CACHE_LOCK:
+        auto_key = None
+        if config.needs_tuning:
+            # open dimensions (tb=0 / policy="auto"): resolve through the
+            # autotuner — exact-simulation search against the config's hw
+            # preset (or the process default model), memoized in the tuning
+            # db.  The plan is cached under the auto key too, so repeat
+            # plan() calls with the same auto config skip even the db hit;
+            # the key carries the resolving model's identity, so installing
+            # a different default hardware model re-resolves instead of
+            # serving a plan tuned for the previous one.
+            from repro.tune import resolve_config, resolution_token
+            auto_key = (n, config, resolution_token(config))
+            cached = _PLAN_CACHE.get(auto_key)
+            if cached is not None:
+                _PLAN_CACHE.move_to_end(auto_key)
+                _PLAN_CACHE_HITS += 1
+                return cached
+            config = resolve_config(n, config)
+        if config.grid == (config.ndev, 1):
+            # an explicit 1D grid (e.g. a tuner winner) builds the identical
+            # schedule as grid=None: canonicalize so both key one cached plan
+            # and one jitted executor
+            config = dataclasses.replace(config, grid=None)
+        if config.lookahead == 0:
+            # same canonicalization for an explicit zero lookahead: the
+            # emitter's L=0 streams are bit-identical to the default
+            config = dataclasses.replace(config, lookahead=None)
+        layout = TileLayout(n, config.tb)   # validates n % tb == 0
+        key = (n, config)
+        cached = _PLAN_CACHE.get(key)
         if cached is not None:
-            _PLAN_CACHE.move_to_end(auto_key)
+            _PLAN_CACHE.move_to_end(key)
+            _PLAN_CACHE_HITS += 1
+            if auto_key is not None:
+                _PLAN_CACHE[auto_key] = cached
             return cached
-        config = resolve_config(n, config)
-    if config.grid == (config.ndev, 1):
-        # an explicit 1D grid (e.g. a tuner winner) builds the identical
-        # schedule as grid=None: canonicalize so both key one cached plan
-        # and one jitted executor
-        config = dataclasses.replace(config, grid=None)
-    if config.lookahead == 0:
-        # same canonicalization for an explicit zero lookahead: the
-        # emitter's L=0 streams are bit-identical to the default
-        config = dataclasses.replace(config, lookahead=None)
-    layout = TileLayout(n, config.tb)   # validates n % tb == 0
-    key = (n, config)
-    cached = _PLAN_CACHE.get(key)
-    if cached is not None:
-        _PLAN_CACHE.move_to_end(key)
+        _SCHEDULE_BUILDS += 1
+        _PLAN_CACHE_MISSES += 1
+        # resolve the default plan here (not in the builders) so the
+        # schedule's metadata carries the config's ladder, not a hardcoded
+        # one
+        pplan = config.plan or uniform_plan(layout.nt, "f64", config.ladder)
+        if config.ndev > 1:
+            msched = build_multidevice_schedule(
+                layout.nt, config.tb, config.ndev, config.policy,
+                config.cache_slots, pplan, grid=config.grid,
+                lookahead=config.lookahead or 0)
+            single = None
+        else:
+            single = build_schedule(layout.nt, config.tb, config.policy,
+                                    config.cache_slots, pplan,
+                                    block=config.block)
+            msched = MultiDeviceSchedule.from_single(single)
+        p = CholeskyPlan(n=n, config=config, schedule=msched, _single=single)
+        _PLAN_CACHE[key] = p
         if auto_key is not None:
-            _PLAN_CACHE[auto_key] = cached
-        return cached
-    _SCHEDULE_BUILDS += 1
-    # resolve the default plan here (not in the builders) so the
-    # schedule's metadata carries the config's ladder, not a hardcoded one
-    pplan = config.plan or uniform_plan(layout.nt, "f64", config.ladder)
-    if config.ndev > 1:
-        msched = build_multidevice_schedule(
-            layout.nt, config.tb, config.ndev, config.policy,
-            config.cache_slots, pplan, grid=config.grid,
-            lookahead=config.lookahead or 0)
-        single = None
-    else:
-        single = build_schedule(layout.nt, config.tb, config.policy,
-                                config.cache_slots, pplan,
-                                block=config.block)
-        msched = MultiDeviceSchedule.from_single(single)
-    p = CholeskyPlan(n=n, config=config, schedule=msched, _single=single)
-    _PLAN_CACHE[key] = p
-    if auto_key is not None:
-        _PLAN_CACHE[auto_key] = p
-    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
-        _PLAN_CACHE.popitem(last=False)
-    return p
+            _PLAN_CACHE[auto_key] = p
+        while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+            _PLAN_CACHE.popitem(last=False)
+        return p

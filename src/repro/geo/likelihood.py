@@ -12,6 +12,16 @@ materializes the dense n x n factor — log|Σ| comes off the diagonal tiles
 and the quad form runs through the blocked forward substitution of
 ``repro.core.solve``, which is how the MLE loop in
 ``examples/geospatial_mle.py`` evaluates ℓ out-of-core.
+
+Multi-observation (0.7): ``y`` may be ``k`` stacked observation vectors
+as an ``(n, k)`` matrix — one forward substitution sweeps the factor for
+all ``k`` quad forms and the entry points return length-``k`` arrays.
+An MLE step over replicated fields (or a serve tenant fanning out many
+correlated likelihood evaluations — the paper's motivating request
+stream) therefore reads each factor tile once, not ``k`` times.  A
+:class:`repro.serve.Session` duck-types the solver surface
+(``solve_lower``/``logdet``/``n``), so the same functions drive the
+served solver pool unchanged.
 """
 from __future__ import annotations
 
@@ -23,23 +33,38 @@ def _is_solver(obj) -> bool:
     return hasattr(obj, "solve_lower") and hasattr(obj, "logdet")
 
 
+def _quad(z: np.ndarray):
+    """‖z‖² per column: float for one rhs, length-k array for a stack."""
+    if z.ndim == 1:
+        return float(z @ z)
+    return np.einsum("ij,ij->j", z, z)
+
+
 def loglik_terms_from_factor(l, y: np.ndarray | None = None):
-    """(logdet, quad) from a lower Cholesky factor or a factored solver."""
+    """(logdet, quad) from a lower Cholesky factor or a factored solver.
+
+    ``y`` of shape ``(n,)`` gives a scalar quad form; ``(n, k)`` stacked
+    observations give a length-``k`` array of quad forms from a single
+    blocked substitution sweep.
+    """
     if _is_solver(l):
         logdet = l.logdet()
         if y is None:
             return logdet, 0.0
         z = l.solve_lower(np.asarray(y, dtype=np.float64))
-        return logdet, float(z @ z)
+        return logdet, _quad(z)
     diag = np.diag(l)
     logdet = 2.0 * np.sum(np.log(diag))
     if y is None:
         return logdet, 0.0
     z = sla.solve_triangular(l, y, lower=True)
-    return logdet, float(z @ z)
+    return logdet, _quad(z)
 
 
-def gaussian_loglik(l, y: np.ndarray | None = None) -> float:
+def gaussian_loglik(l, y: np.ndarray | None = None):
+    """ℓ(θ; y) — a float for one observation vector, a length-``k``
+    array for ``(n, k)`` stacked observations."""
     n = l.n if _is_solver(l) else l.shape[0]
     logdet, quad = loglik_terms_from_factor(l, y)
-    return float(-0.5 * n * np.log(2.0 * np.pi) - 0.5 * logdet - 0.5 * quad)
+    out = -0.5 * n * np.log(2.0 * np.pi) - 0.5 * logdet - 0.5 * quad
+    return out if isinstance(quad, np.ndarray) else float(out)

@@ -1,0 +1,38 @@
+"""`repro.serve` — solver-as-a-service over the static-plan machinery.
+
+The planner API amortizes schedule construction and jit tracing across
+same-shape calls; this package exploits that at traffic scale (the
+ROADMAP's "millions of users" direction): an admission-controlled
+request queue in front of a pool of per-session
+:class:`~repro.core.api.OOCSolver`\\ s, with multi-RHS batching of
+concurrent solves and first-class observability.
+
+    from repro.serve import SolverService
+
+    with SolverService(workers=4) as svc:
+        s = svc.session("tenant-a", n, tb=64, policy="v3")
+        s.factor(sigma)                       # sync facade, or *_async
+        x = s.solve(b)                        # coalesced under load
+        print(svc.metrics.snapshot())
+
+Layers (docs/serving.md walks the request lifecycle):
+
+* :mod:`~repro.serve.service` — front end, sessions, worker pool
+* :mod:`~repro.serve.batching` — multi-RHS solve coalescing
+* :mod:`~repro.serve.admission` — device-memory admission control
+* :mod:`~repro.serve.metrics` — latency/queue/batch/cache counters and
+  a chrome-trace timeline
+"""
+from .admission import (AdmissionController, AdmissionError,
+                        plan_device_bytes, plan_device_slots)
+from .batching import coalesce_head, split_solutions, stack_rhs
+from .metrics import RequestRecord, ServiceMetrics, ServiceTimeline
+from .service import Session, SolverService
+
+__all__ = [
+    "SolverService", "Session",
+    "AdmissionController", "AdmissionError",
+    "plan_device_slots", "plan_device_bytes",
+    "stack_rhs", "split_solutions", "coalesce_head",
+    "ServiceMetrics", "ServiceTimeline", "RequestRecord",
+]

@@ -1,0 +1,169 @@
+"""Concurrent planner use: the plan cache under thread pressure.
+
+The serve worker pool hammers ``repro.plan()`` + ``compile()`` from many
+threads; before 0.7 the cache was an unguarded OrderedDict (corruptible
+``move_to_end``/``popitem``) and a concurrent miss could build the same
+schedule twice.  These tests pin the contract the service relies on:
+
+* mixed-shape stress from N threads never corrupts the cache and keeps
+  its size bounded;
+* concurrent misses on one key collapse to exactly ONE schedule build
+  and ONE jit trace (the amortization contract, now also under threads);
+* results from concurrently compiled/executed solvers are bit-identical
+  to serial execution.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import api
+
+TB = 16
+SHAPES = [(32, "v3"), (48, "v2"), (64, "v3"), (48, "v3"), (32, "v2")]
+
+
+def _cfg(policy, **kw):
+    return repro.CholeskyConfig(tb=TB, policy=policy, backend="numpy", **kw)
+
+
+def _hammer(nthreads, fn):
+    """Run fn(thread_index) on nthreads threads, re-raising any failure."""
+    errs = []
+
+    def wrap(i):
+        try:
+            fn(i)
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=wrap, args=(i,))
+               for i in range(nthreads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errs:
+        raise errs[0]
+
+
+def test_stress_mixed_shapes_bounded_and_bit_identical():
+    """8 threads x mixed shapes: one build per distinct (n, config),
+    bounded cache, results bit-identical to serial."""
+    api.clear_plan_cache()
+    before = api.schedule_build_count()
+    mats = {n: repro.random_spd(n, seed=n) for n, _ in SHAPES}
+    serial = {}
+    for n, policy in SHAPES:
+        s = repro.plan(n, _cfg(policy)).compile()
+        serial[(n, policy)] = s.factor(mats[n])
+    after_serial = api.schedule_build_count()
+    results = {}
+    lock = threading.Lock()
+
+    def worker(i):
+        for rep in range(6):
+            n, policy = SHAPES[(i + rep) % len(SHAPES)]
+            solver = repro.plan(n, _cfg(policy)).compile()
+            l = solver.factor(mats[n])
+            with lock:
+                results.setdefault((n, policy), []).append(l)
+
+    _hammer(8, worker)
+    # every concurrent result equals the serial factorization bit for bit
+    for key, ls in results.items():
+        for l in ls:
+            assert np.array_equal(l, serial[key])
+    # the serial warm-up built each distinct plan once; the stress added
+    # NOTHING (all 48 thread-iterations were cache hits)
+    assert after_serial - before == len(set(SHAPES))
+    assert api.schedule_build_count() == after_serial
+    stats = api.plan_cache_stats()
+    assert stats["size"] <= stats["max"]
+
+
+def test_concurrent_misses_collapse_to_one_build():
+    """N threads planning the SAME cold key race on the miss path: the
+    lock makes exactly one of them build; the rest share the plan."""
+    api.clear_plan_cache()
+    n = 80
+    before = api.schedule_build_count()
+    plans = []
+    lock = threading.Lock()
+
+    def worker(i):
+        p = repro.plan(n, _cfg("v3"))
+        with lock:
+            plans.append(p)
+
+    _hammer(12, worker)
+    assert api.schedule_build_count() - before == 1
+    assert all(p is plans[0] for p in plans)
+
+
+def test_concurrent_compile_single_jit_trace():
+    """compile() raced from many threads builds one executor; after the
+    first factor, the jit-trace counter stays at one per plan."""
+    api.clear_plan_cache()
+    n = 48
+    cfg = repro.CholeskyConfig(tb=TB, policy="v3", backend="jax")
+    a = repro.random_spd(n, seed=5)
+    solvers = []
+    lock = threading.Lock()
+
+    def worker(i):
+        s = repro.plan(n, cfg).compile()
+        with lock:
+            solvers.append(s)
+
+    _hammer(8, worker)
+    execs = {id(s._executor) for s in solvers}
+    assert len(execs) == 1, "compile() raced into multiple executors"
+    # serial first factor (one trace), then concurrent factors reuse it
+    ref = solvers[0].factor(a)
+
+    def factor_worker(i):
+        assert np.array_equal(solvers[i % len(solvers)].factor(a), ref)
+
+    _hammer(8, factor_worker)
+    assert solvers[0].stats["jit_traces"] == 1
+
+
+def test_clear_plan_cache_concurrent_with_plan():
+    """clear_plan_cache() racing plan() never corrupts the cache."""
+    api.clear_plan_cache()
+    stop = threading.Event()
+
+    def clearer(i):
+        while not stop.is_set():
+            api.clear_plan_cache()
+
+    def planner(i):
+        try:
+            for rep in range(30):
+                n, policy = SHAPES[rep % len(SHAPES)]
+                p = repro.plan(n, _cfg(policy))
+                assert p.n == n
+        finally:
+            stop.set()
+
+    t = threading.Thread(target=clearer, args=(0,))
+    t.start()
+    try:
+        _hammer(4, planner)
+    finally:
+        stop.set()
+        t.join()
+    stats = api.plan_cache_stats()
+    assert 0 <= stats["size"] <= stats["max"]
+
+
+def test_cache_stats_counters_move():
+    api.clear_plan_cache()
+    s0 = api.plan_cache_stats()
+    repro.plan(32, _cfg("v3"))
+    repro.plan(32, _cfg("v3"))
+    s1 = api.plan_cache_stats()
+    assert s1["misses"] == s0["misses"] + 1
+    assert s1["hits"] == s0["hits"] + 1

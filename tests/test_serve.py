@@ -1,0 +1,347 @@
+"""repro.serve: service correctness, batching, admission, fairness,
+metrics — everything against small problems on the numpy backend so the
+suite stays fast (the jax path is the same OOCSolver surface underneath,
+covered by test_api/test_backend_equivalence)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+import scipy.linalg as sla
+
+import repro
+from repro.core import api
+from repro.core.analytics import HardwareModel
+from repro.geo.likelihood import gaussian_loglik
+from repro.serve import (AdmissionController, AdmissionError, SolverService,
+                         coalesce_head, plan_device_bytes, plan_device_slots,
+                         split_solutions, stack_rhs)
+
+N, TB = 64, 16
+CFG = repro.CholeskyConfig(tb=TB, policy="v3", backend="numpy")
+
+
+@pytest.fixture
+def spd():
+    return repro.random_spd(N, seed=11)
+
+
+@pytest.fixture
+def serial(spd):
+    """Serial reference solver, factored."""
+    s = repro.plan(N, CFG).compile()
+    s.factor(spd, materialize=False)
+    return s
+
+
+def test_mixed_traffic_bit_identical_to_serial(spd, serial):
+    """Concurrent mixed factor/solve/logdet traffic, batching disabled:
+    every result equals the serial OOCSolver's bit for bit."""
+    rng = np.random.default_rng(0)
+    bs = [rng.standard_normal(N) for _ in range(12)]
+    refs = [serial.solve(b) for b in bs]
+    ref_lower = [serial.solve_lower(b) for b in bs]
+    ld = serial.logdet()
+    with SolverService(workers=3, batch_window=0.0) as svc:
+        sessions = [svc.session(f"t{i}", N, CFG) for i in range(3)]
+        for s in sessions:
+            assert s.factor(spd) is None          # materialize=False
+        futs, lfuts, dfuts = [], [], []
+        for i, b in enumerate(bs):
+            s = sessions[i % 3]
+            futs.append(s.solve_async(b))
+            lfuts.append(s.solve_lower_async(b))
+            dfuts.append(s.logdet_async())
+        for f, ref in zip(futs, refs):
+            assert np.array_equal(f.result(timeout=60), ref)
+        for f, ref in zip(lfuts, ref_lower):
+            assert np.array_equal(f.result(timeout=60), ref)
+        for f in dfuts:
+            assert f.result(timeout=60) == ld
+
+
+def test_batched_solves_coalesce_and_match(spd, serial):
+    """A burst behind a busy worker coalesces into one stacked solve;
+    values match the per-column serial results to 1e-10."""
+    rng = np.random.default_rng(1)
+    bs = [rng.standard_normal(N) for _ in range(8)]
+    refs = [serial.solve(b) for b in bs]
+    with SolverService(workers=1, batch_window=0.02, max_batch=32) as svc:
+        s = svc.session("t", N, CFG)
+        s.factor(spd)
+        futs = [s.solve_async(b) for b in bs]
+        for f, ref in zip(futs, refs):
+            np.testing.assert_allclose(f.result(timeout=60), ref,
+                                       rtol=0, atol=1e-10)
+        snap = svc.metrics.snapshot()
+    assert snap["batch"]["max_occupancy"] >= 2
+    assert snap["batch"]["batched_solves"] >= 1
+
+
+def test_solve_batch_stacked_request(spd, serial):
+    rng = np.random.default_rng(2)
+    B = rng.standard_normal((N, 5))
+    with SolverService(workers=1) as svc:
+        s = svc.session("t", N, CFG)
+        s.factor(spd)
+        X = s.solve_batch(B)
+    c = sla.cho_factor(np.asarray(spd), lower=True)
+    np.testing.assert_allclose(X, sla.cho_solve(c, B), rtol=0, atol=1e-10)
+
+
+def test_factor_solve_fused(spd, serial):
+    b = np.arange(N, dtype=float)
+    with SolverService(workers=1) as svc:
+        s = svc.session("t", N, CFG)
+        x = s.factor_solve(spd, b)
+        assert np.array_equal(x, serial.solve(b))
+        l, x2 = s.factor_solve(spd, b, materialize=True)
+        assert np.array_equal(x2, x)
+        assert np.allclose(l @ l.T, np.asarray(spd), atol=1e-8)
+
+
+def test_solve_before_factor_fails(spd):
+    with SolverService(workers=1) as svc:
+        s = svc.session("t", N, CFG)
+        with pytest.raises(RuntimeError, match="no factor"):
+            s.solve(np.ones(N))
+        # the failure is per-request: the session still works afterwards
+        s.factor(spd)
+        assert s.solve(np.ones(N)).shape == (N,)
+
+
+def test_rhs_validation_front_door(spd):
+    with SolverService(workers=1) as svc:
+        s = svc.session("t", N, CFG)
+        with pytest.raises(ValueError, match="does not match"):
+            s.solve_async(np.ones(N + 1))
+        with pytest.raises(TypeError, match="real-valued"):
+            s.solve_async(np.ones(N, dtype=complex))
+        with pytest.raises(ValueError, match="does not match"):
+            s.factor_async(np.ones((N, N + 1)))
+        with pytest.raises(ValueError, match="stacked"):
+            s.solve_batch_async(np.ones(N))
+
+
+def test_sessions_share_plan_not_solver(spd):
+    api.clear_plan_cache()
+    before = api.schedule_build_count()
+    with SolverService(workers=2) as svc:
+        s1 = svc.session("a", N, CFG)
+        s2 = svc.session("b", N, CFG)
+        assert s1._plan is s2._plan                 # shared via plan cache
+        s1.factor(spd)
+        s2.factor(spd)
+        assert s1._solver is not s2._solver         # pooled per session
+    assert api.schedule_build_count() - before == 1
+
+
+def test_session_idempotent_and_mismatch():
+    with SolverService(workers=1) as svc:
+        s1 = svc.session("a", N, CFG)
+        assert svc.session("a", N, CFG) is s1
+        with pytest.raises(ValueError, match="different config"):
+            svc.session("a", N, repro.CholeskyConfig(tb=TB, policy="v2",
+                                                     backend="numpy"))
+
+
+def test_session_requires_resolved_config():
+    with SolverService(workers=1) as svc:
+        with pytest.raises(ValueError, match="fully resolved"):
+            svc.session("t", N, repro.CholeskyConfig(tb=0, policy="auto"))
+
+
+def test_closed_session_and_service_reject_submits(spd):
+    svc = SolverService(workers=1)
+    s = svc.session("t", N, CFG)
+    s.factor(spd)
+    s.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        s.solve_async(np.ones(N))
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.session("u", N, CFG)
+
+
+def _hw(mem_bytes: float) -> HardwareModel:
+    return HardwareModel("test-hw", {"f64": 1e12}, 1e9, 1e9, 0.0,
+                         mem_bytes=mem_bytes)
+
+
+def test_admission_rejects_never_fits(spd):
+    """A plan whose slot pins exceed the device outright is rejected."""
+    plan = repro.plan(N, CFG)
+    tiny = _hw(plan_device_bytes(plan) - 1)
+    assert plan_device_slots(plan) > tiny.max_cache_slots(TB)
+    with SolverService(workers=1, hw=tiny) as svc:
+        s = svc.session("t", N, CFG)
+        fut = s.factor_async(spd)
+        with pytest.raises(AdmissionError, match="device slots"):
+            fut.result(timeout=60)
+        assert svc.metrics.snapshot()["rejected"] == 1
+
+
+def test_admission_queues_until_release(spd):
+    """Two tenants, memory for one: the second's work only runs after
+    the first session closes and releases its reservation."""
+    plan = repro.plan(N, CFG)
+    one = _hw(int(plan_device_bytes(plan) * 1.5))
+    with SolverService(workers=2, hw=one) as svc:
+        s1 = svc.session("a", N, CFG)
+        s2 = svc.session("b", N, CFG)
+        assert s1.factor(spd) is None              # admitted + done
+        fut = s2.factor_async(spd)                 # oversubscribed: queued
+        time.sleep(0.05)
+        assert not fut.done()
+        assert svc.admission.reserved_bytes() == plan_device_bytes(plan)
+        s1.close()                                 # releases reservation
+        assert fut.result(timeout=60) is None      # now admitted
+        s2.close()
+    assert svc.admission.reserved_bytes() == 0
+
+
+def test_admission_controller_unbounded():
+    ctl = AdmissionController(None)
+    assert ctl.unbounded
+    plan = repro.plan(N, CFG)
+    ctl.check_feasible(plan)                       # no-op
+    assert ctl.try_reserve("k", plan)
+    assert ctl.reserved_bytes() == 0
+
+
+def test_round_robin_fairness(spd):
+    """With one worker and two tenants' bursts queued behind a long
+    request, execution alternates sessions instead of draining the
+    flooder first."""
+    n_gate = 320
+    gate_cfg = repro.CholeskyConfig(tb=16, policy="v3", backend="numpy")
+    with SolverService(workers=1, batch_window=0.0) as svc:
+        s1 = svc.session("a", N, CFG)
+        s2 = svc.session("b", N, CFG)
+        s1.factor(spd)
+        s2.factor(spd)
+        # block the single worker on a bigger tenant's factor so both
+        # bursts queue up behind it
+        gate = svc.session("gate", n_gate, gate_cfg)
+        blocker = gate.factor_async(repro.random_spd(n_gate, seed=12))
+        futs = []
+        for i in range(3):
+            futs.append(s1.solve_async(np.ones(N)))
+            futs.append(s2.solve_async(np.ones(N)))
+        blocker.result(timeout=60)
+        for f in futs:
+            f.result(timeout=60)
+    order = [r.session for r in svc.metrics._records if r.kind == "solve"]
+    assert sorted(order) == ["a"] * 3 + ["b"] * 3
+    assert order == ["a", "b", "a", "b", "a", "b"] or \
+        order == ["b", "a", "b", "a", "b", "a"]
+
+
+def test_metrics_snapshot_and_chrome_trace(spd):
+    with SolverService(workers=2) as svc:
+        s = svc.session("t", N, CFG)
+        s.factor(spd)
+        for _ in range(4):
+            s.solve(np.ones(N))
+        _ = s.logdet()
+        snap = svc.metrics.snapshot()
+    assert snap["completed"] == 6 and snap["rejected"] == 0
+    assert snap["kinds"] == {"factor": 1, "solve": 4, "logdet": 1}
+    assert snap["latency_s"]["p99"] >= snap["latency_s"]["p50"] > 0
+    assert snap["solver"] == {"compiles": 1, "reuse": 5}
+    assert snap["solves_per_s"] > 0
+    trace = repro.chrome_trace(svc.metrics.timeline())
+    names = [e["name"] for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert len(names) == 6
+    assert any(n.startswith("solve:t") for n in names)
+
+
+def test_gaussian_loglik_through_session(spd, serial):
+    """geo.likelihood drives a served session like a local solver, for
+    one observation vector and a stacked (n, k) set."""
+    rng = np.random.default_rng(3)
+    y1 = rng.standard_normal(N)
+    Y = rng.standard_normal((N, 6))
+    with SolverService(workers=2) as svc:
+        s = svc.session("geo", N, CFG)
+        s.factor(spd)
+        assert gaussian_loglik(s, y1) == gaussian_loglik(serial, y1)
+        lls = gaussian_loglik(s, Y)
+    ref = np.array([gaussian_loglik(serial, Y[:, j])
+                    for j in range(Y.shape[1])])
+    assert lls.shape == (6,)
+    np.testing.assert_allclose(lls, ref, rtol=0, atol=1e-10)
+
+
+def test_worker_fault_isolation(spd):
+    """A failing factor (non-square values leak through as NaN) fails
+    its own future; the service and other sessions keep serving."""
+    with SolverService(workers=1) as svc:
+        s1 = svc.session("bad", N, CFG)
+        s2 = svc.session("good", N, CFG)
+        fut = s1.factor_async(-np.eye(N))          # not SPD: POTRF fails
+        with pytest.raises(Exception):
+            fut.result(timeout=60)
+        s2.factor(spd)
+        assert s2.solve(np.ones(N)).shape == (N,)
+
+
+def test_stack_roundtrip_and_coalesce_rules():
+    rng = np.random.default_rng(4)
+    parts = [rng.standard_normal(8), rng.standard_normal((8, 3)),
+             rng.standard_normal(8)]
+    stacked, splits = stack_rhs(parts)
+    assert stacked.shape == (8, 5)
+    back = split_solutions(stacked, splits)
+    for p, b in zip(parts, back):
+        assert p.shape == b.shape and np.array_equal(p, b)
+
+    class R:
+        def __init__(self, kind, k=1, t_deadline=10.0):
+            self.kind, self.k, self.t_deadline = kind, k, t_deadline
+
+    # non-batchable head dispatches alone
+    assert coalesce_head([R("factor"), R("solve")], 0.0, 32, 0.01) == \
+        (1, None)
+    # disabled batching dispatches head alone
+    assert coalesce_head([R("solve"), R("solve")], 0.0, 1, 0.01) == (1, None)
+    assert coalesce_head([R("solve"), R("solve")], 0.0, 32, 0.0) == (1, None)
+    # growable batch inside the window is held until the deadline
+    assert coalesce_head([R("solve"), R("solve")], 0.0, 32, 0.01) == \
+        (0, 10.0)
+    # window expired -> flush
+    assert coalesce_head([R("solve"), R("solve")], 11.0, 32, 0.01) == \
+        (2, None)
+    # a trailing non-solve caps the run and forces immediate dispatch
+    assert coalesce_head([R("solve"), R("solve"), R("factor")],
+                         0.0, 32, 0.01) == (2, None)
+    # max_batch caps total columns
+    assert coalesce_head([R("solve", k=3), R("solve", k=3), R("solve", k=3)],
+                         11.0, 4, 0.01) == (1, None)
+
+
+def test_open_loop_batching_beats_baseline(spd):
+    """The acceptance throughput property at test scale: identical burst,
+    batched strictly faster end-to-end than one-RHS-at-a-time."""
+    rng = np.random.default_rng(5)
+    bs = [rng.standard_normal(N) for _ in range(64)]
+
+    def drain(batch_window, max_batch):
+        with SolverService(workers=1, batch_window=batch_window,
+                           max_batch=max_batch) as svc:
+            s = svc.session("t", N, CFG)
+            s.factor(spd)
+            t0 = time.perf_counter()
+            futs = [s.solve_async(b) for b in bs]
+            xs = [f.result(timeout=120) for f in futs]
+            dt = time.perf_counter() - t0
+            snap = svc.metrics.snapshot()
+        return xs, dt, snap
+
+    xs_base, dt_base, snap_base = drain(0.0, 1)
+    xs_batch, dt_batch, snap_batch = drain(0.005, 32)
+    for a, b in zip(xs_base, xs_batch):
+        np.testing.assert_allclose(a, b, rtol=0, atol=1e-10)
+    assert snap_base["batch"]["max_occupancy"] <= 1
+    assert snap_batch["batch"]["max_occupancy"] >= 2
+    assert snap_batch["solves_per_s"] > snap_base["solves_per_s"]
