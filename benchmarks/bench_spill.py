@@ -1,0 +1,94 @@
+"""Disk tier cost: spill overhead, host-budget sweep, restart tax.
+
+Three headline numbers for the third memory tier:
+
+* **Spill overhead** — wall-clock of the same factorization host-resident
+  vs through a tmpdir :class:`repro.DiskTileStore` at a tight
+  ``host_slots`` budget, with the executed FETCH/SPILL byte volumes
+  (crosschecked against the schedule — the static-stream contract).
+* **Budget sweep** — disk traffic as a function of ``host_slots``: more
+  slabs, fewer evictions; the knee is what ``tune.search`` finds when
+  host memory forces the tier on.
+* **Restart tax** — kill a run mid-stream, resume from the checkpoint,
+  and report the resumed fraction replayed; asserts the resumed factor
+  is bit-identical to the uninterrupted one.
+
+Emits ``benchmarks/out/BENCH_spill.json`` via ``benchmarks.run spill``.
+"""
+import tempfile
+import time
+
+import numpy as np
+
+import repro
+from repro import CheckpointManager, DiskTileStore, RestartableFactorization
+from repro.core.cholesky import run_schedule_numpy, run_schedule_spill
+from repro.core.tiling import random_spd, to_tiles
+
+N = 384          # nt=12 at tb=32: 144 tiles against an 8-slab host tier
+TB = 32
+HOST_SLOTS = 8
+POLICY = "v3"
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def run(out):
+    nt = N // TB
+    a = random_spd(N, seed=0)
+    tiles = to_tiles(a, TB)
+    plain = repro.build_schedule(nt, TB, POLICY)
+    sp = repro.build_schedule(nt, TB, POLICY, host_slots=HOST_SLOTS)
+
+    ref, t_plain = _timed(lambda: run_schedule_numpy(tiles, plain))
+    with tempfile.TemporaryDirectory() as d:
+        store = DiskTileStore.from_matrix(d + "/a.npy", a, TB)
+        host, t_spill = _timed(lambda: run_schedule_spill(store, sp))
+        assert np.array_equal(store.to_tiles(), ref)        # pure bookkeeping
+        assert host.fetched_bytes == sp.fetch_bytes()
+        assert host.spilled_bytes == sp.spill_bytes()
+    out(f"n={N} tb={TB} host_slots={HOST_SLOTS}: "
+        f"host-resident {t_plain:.3f}s, disk tier {t_spill:.3f}s "
+        f"({t_spill / t_plain:.2f}x), fetched {host.fetched_bytes >> 20} MiB, "
+        f"spilled {host.spilled_bytes >> 20} MiB")
+
+    sweep = {}
+    for hs in (nt + 2, 2 * nt, 4 * nt):
+        s = repro.build_schedule(nt, TB, POLICY, host_slots=hs)
+        sweep[hs] = {"fetch_bytes": s.fetch_bytes(),
+                     "spill_bytes": s.spill_bytes()}
+        out(f"  host_slots={hs:3d}: fetch {s.fetch_bytes() >> 20} MiB, "
+            f"spill {s.spill_bytes() >> 20} MiB")
+    hs_list = sorted(sweep)
+    assert sweep[hs_list[0]]["fetch_bytes"] >= sweep[hs_list[-1]]["fetch_bytes"]
+
+    with tempfile.TemporaryDirectory() as d:
+        store = DiskTileStore.from_matrix(d + "/a.npy", a, TB)
+        rf = RestartableFactorization(
+            sp, store, CheckpointManager(d + "/ckpt", keep=2))
+        kill_at = int(0.6 * len(sp.ops))
+        assert rf.run(stop_after_ops=kill_at) is False
+        del rf, store
+        store2 = DiskTileStore.open(d + "/a.npy")
+        rf2 = RestartableFactorization(
+            sp, store2, CheckpointManager(d + "/ckpt", keep=2))
+        _, t_resume = _timed(rf2.run)
+        assert np.array_equal(rf2.result_tiles(), ref)      # bit-identical
+    out(f"  kill at op {kill_at}/{len(sp.ops)}, resume {t_resume:.3f}s, "
+        f"factor bit-identical to uninterrupted run")
+
+    return {
+        "n": N, "tb": TB, "host_slots": HOST_SLOTS, "policy": POLICY,
+        "t_host_resident": round(t_plain, 4),
+        "t_disk_tier": round(t_spill, 4),
+        "overhead_x": round(t_spill / t_plain, 3),
+        "fetch_bytes": host.fetched_bytes,
+        "spill_bytes": host.spilled_bytes,
+        "budget_sweep": {str(k): v for k, v in sweep.items()},
+        "resume": {"kill_at_op": kill_at, "total_ops": len(sp.ops),
+                   "t_resume": round(t_resume, 4), "bit_identical": True},
+    }

@@ -17,9 +17,9 @@ import pathlib
 import sys
 import time
 
-from . import (bench_serve, bench_tune, fig6_versions, fig8_volume,
-               fig9_multidev, fig10_kl, fig11_mxp_perf, fig12_mxp_volume,
-               fig13_traces, perf_cholesky, roofline)
+from . import (bench_serve, bench_spill, bench_tune, fig6_versions,
+               fig8_volume, fig9_multidev, fig10_kl, fig11_mxp_perf,
+               fig12_mxp_volume, fig13_traces, perf_cholesky, roofline)
 
 BENCHES = {
     "fig6": fig6_versions,
@@ -33,6 +33,7 @@ BENCHES = {
     "roofline": roofline,
     "tune": bench_tune,
     "serve": bench_serve,
+    "spill": bench_spill,
 }
 
 OUT_DIR = pathlib.Path(__file__).resolve().parent / "out"

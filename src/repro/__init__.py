@@ -41,8 +41,18 @@ from many tenants, pools per-session solvers over shared plans, batches
 concurrent single-RHS solves into stacked multi-RHS sweeps, and
 schedules device memory across tenants; ``solve(B)`` itself now takes
 ``(n, k)`` stacked right-hand sides.  The ``docs/`` tree (architecture,
-schedule-format, multidevice, tuning, serving) is the narrative
+schedule-format, multidevice, tuning, serving, spill) is the narrative
 documentation; its code blocks are executed by CI.
+
+Disk spill tier + restart (0.8): ``CholeskyConfig(host_slots=H)`` bounds
+*host* residency the same way ``cache_slots`` bounds device residency —
+the tile store lives on disk (:class:`DiskTileStore`), the builder
+post-pass interleaves static ``FETCH``/``SPILL`` ops, and matrices larger
+than host memory factor end-to-end.  The repaired
+:mod:`repro.checkpoint` persists progress at column boundaries keyed by
+the schedule digest; :class:`RestartableFactorization` resumes a killed
+run — mid-column included, via a tile undo journal — to a bit-identical
+factor (docs/spill.md).
 """
 from repro.core.analytics import (HW, HardwareModel, ascii_trace,
                                   chrome_trace, crosscheck_executed_volume,
@@ -50,9 +60,14 @@ from repro.core.analytics import (HW, HardwareModel, ascii_trace,
                                   volume_report_multi)
 from repro.core.api import (CholeskyConfig, CholeskyPlan, OOCSolver,
                             clear_plan_cache, plan, plan_cache_stats)
-from repro.core.cholesky import (MultiDeviceJaxExecutor,
+from repro.core.cholesky import (MultiDeviceJaxExecutor, SpillJaxExecutor,
                                  make_multidevice_jax_executor, ooc_cholesky,
-                                 plan_for_matrix)
+                                 plan_for_matrix, run_multidevice_spill,
+                                 run_schedule_spill)
+from repro.core.spill import (ArrayTileStore, DiskTileStore,
+                              SpilledHostStore, host_residency_at)
+from repro.checkpoint import (CheckpointManager, RestartableFactorization,
+                              TileJournal)
 from repro.core.precision import (LADDERS, PrecisionPlan, assign_precision,
                                   uniform_plan)
 from repro.core.schedule import (MultiDeviceSchedule, Op, OpKind, Schedule,
@@ -62,7 +77,7 @@ from repro.core.tiling import TileLayout, from_tiles, random_spd, to_tiles
 from repro import serve, tune
 from repro.serve import SolverService
 
-__version__ = "0.7.0"
+__version__ = "0.8.0"
 
 __all__ = [
     "__version__",
@@ -71,6 +86,11 @@ __all__ = [
     "plan_cache_stats",
     # executors
     "MultiDeviceJaxExecutor", "make_multidevice_jax_executor",
+    "SpillJaxExecutor", "run_schedule_spill", "run_multidevice_spill",
+    # disk tier + checkpoint/restart
+    "DiskTileStore", "ArrayTileStore", "SpilledHostStore",
+    "host_residency_at", "CheckpointManager", "RestartableFactorization",
+    "TileJournal",
     # one-shot shim + precision planning
     "ooc_cholesky", "plan_for_matrix",
     "PrecisionPlan", "assign_precision", "uniform_plan", "LADDERS",

@@ -1,3 +1,6 @@
 from .manager import CheckpointManager
+from .restart import (JournaledTileStore, RestartableFactorization,
+                      TileJournal)
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "JournaledTileStore",
+           "RestartableFactorization", "TileJournal"]

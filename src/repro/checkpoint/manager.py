@@ -1,17 +1,21 @@
 """Fault-tolerant checkpointing: atomic writes, retention, preemption path.
 
-* **atomicity** — write to ``step_<n>.tmp/`` then ``os.replace`` to
-  ``step_<n>/``; a crash mid-write never corrupts the latest checkpoint.
-* **sharded-aware** — each host saves only the addressable shards of every
-  array (``.addressable_shards``), one ``.npz`` per host; restore reads the
-  host's own file and device_puts into the (possibly different) target
-  sharding — this is what makes **elastic restart** work: the on-disk
-  layout is mesh-shape-agnostic (global arrays are reassembled from shard
-  index metadata).  On the single-process CPU CI this degrades to one file.
+* **atomicity** — every process writes into ``step_<n>.tmp/``; process 0
+  then ``os.replace``s it to ``step_<n>/`` (removing a stale ``step_<n>/``
+  from an earlier save of the same step first).  A crash mid-write never
+  corrupts the latest checkpoint: ``latest_step`` ignores ``.tmp``
+  leftovers.
+* **per-process files** — each process saves its host-local view of every
+  leaf (``jax.device_get``) as ``host_<p>.npz``; restore reads the
+  process's own file and casts each array back to the target leaf's
+  dtype.  No resharding is attempted: on restore the caller receives
+  host numpy arrays and is responsible for any ``device_put`` into a
+  target sharding.  On the single-process CPU CI this is one file.
 * **preemption** — ``save_on_signal`` installs a SIGTERM handler that
-  requests an immediate save at the next step boundary (the train loop
+  requests an immediate save at the next step boundary (the driving loop
   polls ``should_save_now``).
-* **retention** — keep the newest ``keep`` checkpoints, delete older.
+* **retention** — keep the newest ``keep`` checkpoints (``keep >= 1``),
+  delete older.
 """
 from __future__ import annotations
 
@@ -36,6 +40,10 @@ def _flatten_with_paths(tree):
 
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
+        if keep < 1:
+            raise ValueError(
+                f"keep must be >= 1 (the newest checkpoint is always "
+                f"retained), got {keep}")
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
@@ -59,8 +67,9 @@ class CheckpointManager:
         proc = jax.process_index()
         tmp = self._step_dir(step) + ".tmp"
         final = self._step_dir(step)
-        if proc == 0:
-            os.makedirs(tmp, exist_ok=True)
+        # every process writes its own host_<p>.npz into tmp, so every
+        # process must be able to create it (first writer wins)
+        os.makedirs(tmp, exist_ok=True)
         leaves = _flatten_with_paths(tree)
         arrays, meta = {}, {}
         for key, leaf in leaves.items():
@@ -68,15 +77,22 @@ class CheckpointManager:
             arrays[key.replace("/", "__")] = arr
             meta[key] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
         np.savez(os.path.join(tmp, f"host_{proc}.npz"), **arrays)
-        if extra is not None and proc == 0:
-            with open(os.path.join(tmp, "extra.json"), "w") as f:
-                json.dump(extra, f)
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump(meta, f)
-        # barrier-equivalent on multi-host would sync here; then atomic rename
-        os.replace(tmp, final)
+        if proc == 0:
+            # shared metadata is written once, by process 0 only
+            if extra is not None:
+                with open(os.path.join(tmp, "extra.json"), "w") as f:
+                    json.dump(extra, f)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            # barrier-equivalent on multi-host would sync here; then one
+            # atomic rename.  Re-saving a step (resume, then checkpoint
+            # the same boundary again) must not trip over the old dir:
+            # os.replace raises OSError for non-empty directory targets.
+            if os.path.isdir(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
         self._save_requested = False
-        self._gc()
 
     def restore(self, tree_like, step: int | None = None):
         step = self.latest_step() if step is None else step
@@ -84,15 +100,20 @@ class CheckpointManager:
             return None, None
         d = self._step_dir(step)
         proc = jax.process_index()
-        data = np.load(os.path.join(d, f"host_{proc}.npz"))
+        path = os.path.join(d, f"host_{proc}.npz")
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"no checkpoint for step {step}: {path!r} does not exist "
+                f"(expected checkpoint directory {d!r})")
+        data = np.load(path)
         leaves = _flatten_with_paths(tree_like)
         restored = {}
         for key in leaves:
             restored[key] = data[key.replace("/", "__")]
         flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
         new_leaves = []
-        for path, leaf in flat:
-            key = "/".join(str(p) for p in path)
+        for path_, leaf in flat:
+            key = "/".join(str(p) for p in path_)
             arr = restored[key]
             tgt_dtype = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
             new_leaves.append(np.asarray(arr, dtype=tgt_dtype))

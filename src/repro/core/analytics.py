@@ -26,10 +26,15 @@ from __future__ import annotations
 
 import dataclasses
 
-from .schedule import MultiDeviceSchedule, OpKind, Schedule
+from .schedule import HOST_IO, MultiDeviceSchedule, OpKind, Schedule
 
 GB = 1e9
 TFLOP = 1e12
+
+# disk bandwidth assumed when a model records none (datasheet presets
+# predate the disk tier, hand-built models may omit it): a mid-range
+# NVMe doing large sequential tile I/O.
+_DISK_BW_FALLBACK = 2 * GB
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +59,16 @@ class HardwareModel:
     # Measured models fill this from micro-benchmarks (repro.tune.calibrate);
     # datasheet presets leave it None and every task runs at the class peak.
     kernel_flops: dict | None = None
+    # disk tier (spill schedules, host_slots > 0): sequential read/write
+    # bytes/s of the tile-store device and host RAM capacity.  0 = unknown:
+    # the simulators fall back to _DISK_BW_FALLBACK and treat host memory
+    # as unbounded.  repro.tune.calibrate() measures all three; datasheet
+    # presets leave host_mem_bytes at 0 (host RAM is a property of the
+    # box, not the accelerator), so the tuner's spill axis only engages
+    # on measured or explicitly capped models.
+    disk_read_bw: float = 0.0
+    disk_write_bw: float = 0.0
+    host_mem_bytes: float = 0.0
 
     def task_rate(self, task: str, cls_name: str) -> float:
         """FLOP/s for one task kind (``"gemm"``/``"syrk"``/...) at one
@@ -73,6 +88,13 @@ class HardwareModel:
             return 2**31 - 1
         return int(self.mem_bytes // (8 * tb * tb)) - reserve_slots
 
+    def max_host_slots(self, tb: int) -> int:
+        """Largest host-slab budget that fits ``host_mem_bytes`` for
+        tb x tb f64 slabs; unbounded when the capacity is unknown (0)."""
+        if self.host_mem_bytes <= 0:
+            return 2**31 - 1
+        return int(self.host_mem_bytes // (8 * tb * tb))
+
 
 HW = {
     # PCIe Gen4 x16 ~ 25 GB/s effective; A100 fp64 tensor 19.5 TF; 80 GB HBM.
@@ -80,27 +102,31 @@ HW = {
         "a100-pcie",
         {"f64": 19.5 * TFLOP, "f32": 19.5 * TFLOP, "f16": 312 * TFLOP,
          "bf16": 312 * TFLOP, "f8e4m3": 312 * TFLOP},
-        25 * GB, 25 * GB, 12e-6, mem_bytes=80 * GB),
+        25 * GB, 25 * GB, 12e-6, mem_bytes=80 * GB,
+        disk_read_bw=3.2 * GB, disk_write_bw=2.8 * GB),
     # PCIe Gen5 x16 ~ 50 GB/s effective; H100 fp64 tensor ~60 TF (free
     # clocks); 80 GB HBM3.
     "h100-pcie": HardwareModel(
         "h100-pcie",
         {"f64": 60 * TFLOP, "f32": 60 * TFLOP, "f16": 750 * TFLOP,
          "bf16": 750 * TFLOP, "f8e4m3": 1500 * TFLOP},
-        50 * GB, 50 * GB, 12e-6, mem_bytes=80 * GB),
+        50 * GB, 50 * GB, 12e-6, mem_bytes=80 * GB,
+        disk_read_bw=6.5 * GB, disk_write_bw=5.0 * GB),
     # NVLink-C2C: 900 GB/s bidirectional -> 450 GB/s per direction; 96 GB.
     "gh200": HardwareModel(
         "gh200",
         {"f64": 62 * TFLOP, "f32": 62 * TFLOP, "f16": 990 * TFLOP,
          "bf16": 990 * TFLOP, "f8e4m3": 1980 * TFLOP},
-        450 * GB, 450 * GB, 12e-6, mem_bytes=96 * GB),
+        450 * GB, 450 * GB, 12e-6, mem_bytes=96 * GB,
+        disk_read_bw=6.5 * GB, disk_write_bw=5.0 * GB),
     # TPU v5e: bf16 MXU 197 TF, fp8 394 TF; f32 via 3-pass ~ 1/4 rate;
     # f64 emulated ~ 1/32 bf16.  Host DMA over PCIe ~ 32 GB/s; 16 GB HBM2.
     "tpu-v5e": HardwareModel(
         "tpu-v5e",
         {"f64": 6.2 * TFLOP, "f32": 49 * TFLOP, "f16": 197 * TFLOP,
          "bf16": 197 * TFLOP, "f8e4m3": 394 * TFLOP},
-        32 * GB, 32 * GB, 0.0, mem_bytes=16 * GB),
+        32 * GB, 32 * GB, 0.0, mem_bytes=16 * GB,
+        disk_read_bw=2.0 * GB, disk_write_bw=1.2 * GB),
 }
 
 _TASK_FLOPS = {
@@ -122,6 +148,10 @@ class SimResult:
     alloc_events: int
     timeline: list           # (engine, start, end, label)
     flops_useful: float      # n^3/3
+    # disk lane (spill schedules only; zero for host_slots == 0)
+    disk_busy: float = 0.0
+    fetch_bytes: int = 0
+    spill_bytes: int = 0
 
     @property
     def tflops(self) -> float:
@@ -142,20 +172,40 @@ def _as_single(sched) -> Schedule:
 
 
 def simulate(sched: Schedule, hw: HardwareModel, record_timeline: bool = False) -> SimResult:
-    """Event-driven simulation of the op stream on a three-engine machine."""
+    """Event-driven simulation of the op stream on a three-engine machine.
+
+    Spill schedules (``host_slots > 0``) add a fourth engine: the disk
+    lane.  FETCH occupies it for ``bytes / disk_read_bw`` (a binding
+    fetch, ``bytes == 0``, only rebinds the slab), SPILL for
+    ``bytes / disk_write_bw``; LOAD/STORE pick up RAW/WAR hazards on the
+    host slab the schedule bound their tile to, so host-tier contention
+    shows up in the makespan exactly like device-tier contention does.
+    """
     sched = _as_single(sched)
     tb = sched.tb
     lad = sched.plan.ladder
     overlap = sched.policy != "sync"
+    spill = sched.host_slots > 0
+    read_bw = hw.disk_read_bw or _DISK_BW_FALLBACK
+    write_bw = hw.disk_write_bw or _DISK_BW_FALLBACK
 
-    nslots = max(max(o.slot_c, o.slot_a, o.slot_b) for o in sched.ops) + 1
+    nslots = max(max(o.slot_c, o.slot_a, o.slot_b)
+                 for o in sched.ops if o.kind not in HOST_IO) + 1
     ready = [0.0] * nslots        # time the slot's contents become valid
     reads = [0.0] * nslots        # time the slot's pending reads complete
     t_h2d = t_d2h = t_cmp = 0.0   # engine-free times
-    busy = {"h2d": 0.0, "d2h": 0.0, "cmp": 0.0}
-    nbytes = {"h2d": 0, "d2h": 0}
+    t_dsk = 0.0
+    busy = {"h2d": 0.0, "d2h": 0.0, "cmp": 0.0, "dsk": 0.0}
+    nbytes = {"h2d": 0, "d2h": 0, "fetch": 0, "spill": 0}
     allocs = 0
     timeline = []
+    # host tier: slab validity/read hazards + the static tile->slab map,
+    # replayed from the FETCH records exactly as the executors replay it
+    hready = [0.0] * sched.host_slots
+    hreads = [0.0] * sched.host_slots
+    tile_at = [None] * sched.host_slots
+    hslot_of = {}                 # (i, j) -> slab
+    disk_ready = {}               # (i, j) -> time the disk copy is valid
 
     def run_on(engine_free, dep, dur, engine, label):
         start = max(engine_free, dep)
@@ -166,7 +216,38 @@ def simulate(sched: Schedule, hw: HardwareModel, record_timeline: bool = False) 
         return end
 
     for op in sched.ops:
-        if op.kind is OpKind.ALLOC:
+        if op.kind is OpKind.FETCH:
+            s = op.slot_c
+            if tile_at[s] is not None:
+                del hslot_of[tile_at[s]]
+            dur = op.bytes / read_bw
+            nbytes["fetch"] += op.bytes
+            dep = max(hreads[s], hready[s],
+                      disk_ready.get((op.i, op.j), 0.0))
+            if overlap:
+                t_dsk = run_on(t_dsk, dep, dur, "dsk", f"F{op.i},{op.j}")
+                end = t_dsk
+            else:
+                t_cmp = run_on(t_cmp, dep, dur, "dsk", f"F{op.i},{op.j}")
+                t_dsk = end = t_cmp
+            hready[s] = end
+            tile_at[s] = (op.i, op.j)
+            hslot_of[(op.i, op.j)] = s
+        elif op.kind is OpKind.SPILL:
+            s = op.slot_c
+            dur = op.bytes / write_bw
+            nbytes["spill"] += op.bytes
+            if overlap:
+                t_dsk = run_on(t_dsk, hready[s], dur, "dsk",
+                               f"W{op.i},{op.j}")
+                end = t_dsk
+            else:
+                t_cmp = run_on(t_cmp, hready[s], dur, "dsk",
+                               f"W{op.i},{op.j}")
+                t_dsk = end = t_cmp
+            disk_ready[(op.i, op.j)] = end
+            hreads[s] = max(hreads[s], end)
+        elif op.kind is OpKind.ALLOC:
             allocs += 1
             t_cmp += hw.alloc_overhead  # cudaMalloc stalls the stream
             # a fresh buffer: the recycled slot id carries no hazards
@@ -180,6 +261,9 @@ def simulate(sched: Schedule, hw: HardwareModel, record_timeline: bool = False) 
             # (WAR — e.g. a STORE still draining the slot) and for any
             # in-flight write of the previous contents (WAW)
             dep = max(reads[op.slot_c], ready[op.slot_c])
+            hs = hslot_of.get((op.i, op.j)) if spill else None
+            if hs is not None:      # RAW on the host slab's FETCH
+                dep = max(dep, hready[hs])
             if overlap:
                 t_h2d = run_on(t_h2d, dep, dur, "h2d", f"L{op.i},{op.j}")
                 ready[op.slot_c] = t_h2d
@@ -187,17 +271,25 @@ def simulate(sched: Schedule, hw: HardwareModel, record_timeline: bool = False) 
                 t_cmp = run_on(t_cmp, dep, dur, "h2d", f"L{op.i},{op.j}")
                 t_h2d = t_cmp
                 ready[op.slot_c] = t_cmp
+            if hs is not None:
+                hreads[hs] = max(hreads[hs], ready[op.slot_c])
         elif op.kind is OpKind.STORE:
             dur = op.bytes / hw.d2h_bw
             nbytes["d2h"] += op.bytes
+            dep = ready[op.slot_c]
+            hs = hslot_of.get((op.i, op.j)) if spill else None
+            if hs is not None:      # WAR on the target host slab
+                dep = max(dep, hreads[hs])
             if overlap:
-                t_d2h = run_on(t_d2h, ready[op.slot_c], dur, "d2h", f"S{op.i},{op.j}")
+                t_d2h = run_on(t_d2h, dep, dur, "d2h", f"S{op.i},{op.j}")
                 end = t_d2h
             else:
-                t_cmp = run_on(t_cmp, ready[op.slot_c], dur, "d2h", f"S{op.i},{op.j}")
+                t_cmp = run_on(t_cmp, dep, dur, "d2h", f"S{op.i},{op.j}")
                 t_d2h = t_cmp
                 end = t_cmp
             reads[op.slot_c] = max(reads[op.slot_c], end)
+            if hs is not None:
+                hready[hs] = end
         else:  # compute
             flops = _TASK_FLOPS[op.kind](tb)
             rate = hw.task_rate(op.kind.value, lad[op.cls])
@@ -210,20 +302,22 @@ def simulate(sched: Schedule, hw: HardwareModel, record_timeline: bool = False) 
                 if s >= 0 and s != op.slot_c:
                     reads[s] = max(reads[s], t_cmp)
 
-    makespan = max(t_h2d, t_d2h, t_cmp)
+    makespan = max(t_h2d, t_d2h, t_cmp, t_dsk)
     return SimResult(
         makespan=makespan,
         compute_busy=busy["cmp"], h2d_busy=busy["h2d"], d2h_busy=busy["d2h"],
         h2d_bytes=nbytes["h2d"], d2h_bytes=nbytes["d2h"],
         alloc_events=allocs, timeline=timeline,
         flops_useful=sched.flops(),
+        disk_busy=busy["dsk"],
+        fetch_bytes=nbytes["fetch"], spill_bytes=nbytes["spill"],
     )
 
 
 def volume_report(sched: Schedule) -> dict:
     """Exact C2G/G2C byte volumes (paper Fig. 8 / Fig. 12)."""
     sched = _as_single(sched)
-    return {
+    rep = {
         "policy": sched.policy,
         "nt": sched.nt,
         "tb": sched.tb,
@@ -237,6 +331,16 @@ def volume_report(sched: Schedule) -> dict:
         "allocs": sched.count(OpKind.ALLOC),
         "matrix_bytes": 8 * (sched.nt * sched.tb) ** 2,
     }
+    if sched.host_slots:
+        rep.update({
+            "host_slots": sched.host_slots,
+            "host_bytes": 8 * sched.host_slots * sched.tb ** 2,
+            "fetch_bytes": sched.fetch_bytes(),
+            "spill_bytes": sched.spill_bytes(),
+            "fetches": sched.count(OpKind.FETCH),
+            "spills": sched.count(OpKind.SPILL),
+        })
+    return rep
 
 
 # ---------------------------------------------------------------------------
@@ -252,6 +356,8 @@ class DeviceSimStats:
     d2h_bytes: int
     recv_bytes: int
     finish: float          # when this device's last engine goes idle
+    fetch_bytes: int = 0   # disk lane (spill schedules only)
+    spill_bytes: int = 0
 
 
 @dataclasses.dataclass
@@ -262,6 +368,10 @@ class MultiSimResult:
     link_bytes: int
     flops_useful: float
     timeline: list         # (engine, start, end, label); engine "d<k>:h2d" etc.
+    # shared disk lane (spill schedules only; zero for host_slots == 0)
+    disk_busy: float = 0.0
+    fetch_bytes: int = 0
+    spill_bytes: int = 0
 
     @property
     def tflops(self) -> float:
@@ -312,9 +422,21 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
         link_bw = hw.link_bw or hw.h2d_bw
     tb, lad, ndev = msched.tb, msched.plan.ladder, msched.ndev
     overlap = msched.policy != "sync"
+    spill = msched.host_slots > 0
+    read_bw = hw.disk_read_bw or _DISK_BW_FALLBACK
+    write_bw = hw.disk_write_bw or _DISK_BW_FALLBACK
 
     ready = [[0.0] * msched.stream_nslots(d) for d in range(ndev)]
     reads = [[0.0] * msched.stream_nslots(d) for d in range(ndev)]
+    # host tier (spill schedules): per-device slab hazards + tile->slab
+    # maps, one *shared* disk engine (the stores all target one device)
+    hready = [[0.0] * msched.host_slots for _ in range(ndev)]
+    hreads = [[0.0] * msched.host_slots for _ in range(ndev)]
+    tile_at = [[None] * msched.host_slots for _ in range(ndev)]
+    hslot_of = [{} for _ in range(ndev)]
+    disk_ready = {}
+    t_dsk = 0.0
+    disk_busy = 0.0
     # (i, j) -> time the tile's final value is available in device d's
     # host slab (its own STOREs + host-landing RECVs); recv_host is the
     # RECV-delivered subset, the only tiles whose LOAD must wait (a
@@ -326,7 +448,8 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
     t_cmp = [0.0] * ndev
     t_link = 0.0
     busy = [{"h2d": 0.0, "d2h": 0.0, "cmp": 0.0} for _ in range(ndev)]
-    nbytes = [{"h2d": 0, "d2h": 0, "recv": 0} for _ in range(ndev)]
+    nbytes = [{"h2d": 0, "d2h": 0, "recv": 0, "fetch": 0, "spill": 0}
+              for _ in range(ndev)]
     link_busy = 0.0
     link_bytes = 0
     timeline = []
@@ -340,12 +463,52 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
     pipe_lane = record_timeline and msched.lookahead > 0
 
     def run_op(d, op, phase="update"):
-        nonlocal t_link, link_busy, link_bytes
-        if op.kind is OpKind.LOAD:
+        nonlocal t_link, link_busy, link_bytes, t_dsk, disk_busy
+        if op.kind is OpKind.FETCH:
+            s = op.slot_c
+            if tile_at[d][s] is not None:
+                del hslot_of[d][tile_at[d][s]]
+            dur = op.bytes / read_bw
+            nbytes[d]["fetch"] += op.bytes
+            dep = max(hreads[d][s], hready[d][s],
+                      disk_ready.get((op.i, op.j), 0.0))
+            if not overlap:
+                dep = max(dep, t_cmp[d])
+            start = max(t_dsk, dep)
+            t_dsk = start + dur
+            disk_busy += dur
+            if not overlap:
+                t_cmp[d] = t_dsk
+            hready[d][s] = t_dsk
+            tile_at[d][s] = (op.i, op.j)
+            hslot_of[d][(op.i, op.j)] = s
+            # the fetched slab is this device's host copy of the tile
+            host_avail[d][(op.i, op.j)] = max(
+                host_avail[d].get((op.i, op.j), 0.0), t_dsk)
+            span("dsk", start, t_dsk, f"F{op.i},{op.j}@d{d}")
+        elif op.kind is OpKind.SPILL:
+            s = op.slot_c
+            dur = op.bytes / write_bw
+            nbytes[d]["spill"] += op.bytes
+            dep = hready[d][s]
+            if not overlap:
+                dep = max(dep, t_cmp[d])
+            start = max(t_dsk, dep)
+            t_dsk = start + dur
+            disk_busy += dur
+            if not overlap:
+                t_cmp[d] = t_dsk
+            disk_ready[(op.i, op.j)] = t_dsk
+            hreads[d][s] = max(hreads[d][s], t_dsk)
+            span("dsk", start, t_dsk, f"W{op.i},{op.j}@d{d}")
+        elif op.kind is OpKind.LOAD:
             dur = op.bytes / hw.h2d_bw
             nbytes[d]["h2d"] += op.bytes
             dep = max(reads[d][op.slot_c], ready[d][op.slot_c],
                       recv_host[d].get((op.i, op.j), 0.0))
+            hs = hslot_of[d].get((op.i, op.j)) if spill else None
+            if hs is not None:      # RAW on the host slab's FETCH
+                dep = max(dep, hready[d][hs])
             if overlap:
                 start = max(t_h2d[d], dep)
                 t_h2d[d] = start + dur
@@ -356,11 +519,16 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
                 t_h2d[d] = end = t_cmp[d]
             busy[d]["h2d"] += dur
             ready[d][op.slot_c] = end
+            if hs is not None:
+                hreads[d][hs] = max(hreads[d][hs], end)
             span(f"d{d}:h2d", start, end, f"L{op.i},{op.j}")
         elif op.kind is OpKind.STORE:
             dur = op.bytes / hw.d2h_bw
             nbytes[d]["d2h"] += op.bytes
             dep = ready[d][op.slot_c]
+            hs = hslot_of[d].get((op.i, op.j)) if spill else None
+            if hs is not None:      # WAR on the target host slab
+                dep = max(dep, hreads[d][hs])
             if overlap:
                 start = max(t_d2h[d], dep)
                 t_d2h[d] = start + dur
@@ -372,6 +540,8 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
             busy[d]["d2h"] += dur
             reads[d][op.slot_c] = max(reads[d][op.slot_c], end)
             host_avail[d][(op.i, op.j)] = end
+            if hs is not None:
+                hready[d][hs] = end
             span(f"d{d}:d2h", start, end, f"S{op.i},{op.j}")
         elif op.kind is OpKind.BCAST:
             pass    # availability tracked via host_avail; RECVs carry cost
@@ -396,6 +566,10 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
             else:                   # host-landing: receiver slab coherence
                 host_avail[d][(op.i, op.j)] = t_link
                 recv_host[d][(op.i, op.j)] = t_link
+                if spill:           # the landing writes a bound host slab
+                    hs = hslot_of[d].get((op.i, op.j))
+                    if hs is not None:
+                        hready[d][hs] = t_link
             span("link", start, t_link, f"B{op.i},{op.j}->d{d}")
         else:  # compute
             flops = _TASK_FLOPS[op.kind](tb)
@@ -427,14 +601,18 @@ def simulate_multi(msched: MultiDeviceSchedule, hw: HardwareModel,
             compute_busy=busy[d]["cmp"], h2d_busy=busy[d]["h2d"],
             d2h_busy=busy[d]["d2h"], h2d_bytes=nbytes[d]["h2d"],
             d2h_bytes=nbytes[d]["d2h"], recv_bytes=nbytes[d]["recv"],
-            finish=max(t_h2d[d], t_d2h[d], t_cmp[d]))
+            finish=max(t_h2d[d], t_d2h[d], t_cmp[d]),
+            fetch_bytes=nbytes[d]["fetch"], spill_bytes=nbytes[d]["spill"])
         for d in range(ndev)
     ]
-    makespan = max([t_link] + [dv.finish for dv in devices])
+    makespan = max([t_link, t_dsk] + [dv.finish for dv in devices])
     return MultiSimResult(
         makespan=makespan, devices=devices,
         link_busy=link_busy, link_bytes=link_bytes,
         flops_useful=msched.flops(), timeline=timeline,
+        disk_busy=disk_busy,
+        fetch_bytes=sum(n["fetch"] for n in nbytes),
+        spill_bytes=sum(n["spill"] for n in nbytes),
     )
 
 
@@ -453,7 +631,7 @@ def volume_report_multi(msched: MultiDeviceSchedule) -> dict:
             "cache_hits": msched.hits[d] if msched.hits else 0,
             "evictions": msched.evictions[d] if msched.evictions else 0,
         })
-    return {
+    rep = {
         "policy": msched.policy,
         "nt": msched.nt,
         "tb": msched.tb,
@@ -465,6 +643,17 @@ def volume_report_multi(msched: MultiDeviceSchedule) -> dict:
         "matrix_bytes": 8 * (msched.nt * msched.tb) ** 2,
         "per_device": per_device,
     }
+    if msched.host_slots:
+        rep.update({
+            "host_slots": msched.host_slots,
+            "fetch_bytes": msched.fetch_bytes(),
+            "spill_bytes": msched.spill_bytes(),
+        })
+        for dev in per_device:
+            d = dev["device"]
+            dev["fetch_bytes"] = msched.fetch_bytes(d)
+            dev["spill_bytes"] = msched.spill_bytes(d)
+    return rep
 
 
 def crosscheck_executed_volume(msched: MultiDeviceSchedule, executed: dict,
@@ -567,14 +756,19 @@ def ascii_trace(result: SimResult, width: int = 100) -> str:
     if not result.timeline:
         return "(timeline not recorded)"
     span = result.makespan
-    rows = {"h2d": [" "] * width, "cmp": [" "] * width, "d2h": [" "] * width}
-    glyph = {"h2d": "o", "cmp": "#", "d2h": "g"}
+    rows = {"h2d": [" "] * width, "cmp": [" "] * width,
+            "d2h": [" "] * width, "dsk": [" "] * width}
+    glyph = {"h2d": "o", "cmp": "#", "d2h": "g", "dsk": "d"}
+    seen_dsk = False
     for engine, s, e, _ in result.timeline:
+        seen_dsk = seen_dsk or engine == "dsk"
         a = int(s / span * (width - 1))
         b = max(a + 1, int(e / span * (width - 1)))
         for x in range(a, min(b, width)):
             rows[engine][x] = glyph[engine]
+    lanes = [("G2C", rows["h2d"]), ("Work", rows["cmp"]),
+             ("C2G", rows["d2h"])]
+    if seen_dsk:
+        lanes.append(("Disk", rows["dsk"]))
     return "\n".join(f"{name:>4s} |{''.join(row)}|"
-                     for name, row in [("G2C", rows["h2d"]),
-                                       ("Work", rows["cmp"]),
-                                       ("C2G", rows["d2h"])])
+                     for name, row in lanes)

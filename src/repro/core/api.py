@@ -88,6 +88,14 @@ class CholeskyConfig:
     extra cache slot and ``nt`` extra panel slots); ``None`` means 0,
     or a searched dimension when the tuner is engaged.
 
+    Disk tier: ``host_slots=H > 0`` bounds host residency to ``H`` tile
+    slabs over a disk-backed store — the builder post-pass interleaves
+    explicit ``FETCH``/``SPILL`` ops, executors replay them against a
+    :class:`~repro.core.spill.DiskTileStore`, and the factorization can
+    exceed host memory (docs/spill.md).  Incompatible with
+    ``lookahead > 0``; ``ndev > 1`` spill schedules run on the NumPy
+    replay.
+
     Open dimensions (0.4): ``tb=0`` and/or ``policy="auto"`` leave those
     axes to the autotuner — ``plan()`` resolves them through
     :func:`repro.tune.resolve_config` (exact-simulation search against
@@ -117,6 +125,9 @@ class CholeskyConfig:
                                               #   trailing update (ndev > 1);
                                               #   None = 0, or searched when
                                               #   the tuner is engaged
+    host_slots: int = 0                       # bounded host tier over a disk
+                                              #   store (0 = host-resident;
+                                              #   > 0 inserts FETCH/SPILL)
 
     def __post_init__(self):
         object.__setattr__(self, "policy", str(self.policy).lower())
@@ -197,6 +208,21 @@ class CholeskyConfig:
             raise ValueError(
                 f"multi-device schedules support sync/v1/v2/v3, "
                 f"got {self.policy!r}")
+        if self.host_slots < 0:
+            raise ValueError(f"host_slots must be >= 0 (0 = host-resident "
+                             f"store, no spill tier), got {self.host_slots}")
+        if self.host_slots > 0:
+            if (self.lookahead or 0) > 0:
+                raise ValueError(
+                    "host_slots > 0 (disk spill tier) is incompatible with "
+                    "lookahead > 0: the spill post-pass inserts ops into "
+                    "each stream, which would invalidate the pipelined "
+                    "emitter's dispatch-chunk indices")
+            if self.ndev > 1 and self.backend == "jax":
+                raise ValueError(
+                    "host_slots > 0 with ndev > 1 runs on the NumPy replay "
+                    "(the multi-device JAX executor keeps full row slabs "
+                    "device-resident); use backend='auto' or 'numpy'")
         if self.hw is not None:
             from .analytics import HW
             if self.hw not in HW:
@@ -241,6 +267,10 @@ class CholeskyConfig:
         """
         if self.backend != "auto":
             return self.backend
+        if self.ndev > 1 and self.host_slots > 0:
+            # the multi-device spill replay is numpy-only (the jax
+            # executor keeps full row slabs device-resident)
+            return "numpy"
         if self.ndev == 1:
             return "jax"
         try:
@@ -365,6 +395,10 @@ class OOCSolver:
         elif cfg.resolved_backend() == "numpy":
             from .cholesky import run_schedule_numpy
             out = run_schedule_numpy(tiles, self._plan.single_schedule())
+        elif self._executor.spill is not None:
+            # segmented spill executor: host tiles stay numpy (the
+            # bounded slab buffer is the only jax-resident host state)
+            out = np.asarray(self._executor.fn(tiles), dtype=np.float64)
         else:
             import jax.numpy as jnp
             ex = self._executor
@@ -467,6 +501,7 @@ class _CompiledExecutor:
         self._jit_traces = 0
         self.fn = None
         self.multidevice = None    # MultiDeviceJaxExecutor (jax, ndev > 1)
+        self.spill = None          # SpillJaxExecutor (jax, host_slots > 0)
         cfg = plan.config
         self.dtype = _resolved_dtype(cfg)
         if cfg.resolved_backend() != "jax":
@@ -477,6 +512,15 @@ class _CompiledExecutor:
             self.multidevice = make_multidevice_jax_executor(
                 plan.schedule, self.dtype, use_pallas=cfg.use_pallas)
             self.fn = self.multidevice
+            return
+        if cfg.host_slots > 0:
+            # segmented executor over the bounded slab buffer; jits one
+            # program per device segment, disk I/O driven between them
+            from .cholesky import SpillJaxExecutor
+            self.spill = SpillJaxExecutor(plan.single_schedule(),
+                                          self.dtype,
+                                          use_pallas=cfg.use_pallas)
+            self.fn = self.spill
             return
         from .cholesky import make_jax_executor
         raw = make_jax_executor(plan.single_schedule(), self.dtype,
@@ -493,6 +537,8 @@ class _CompiledExecutor:
     def jit_traces(self) -> int:
         if self.multidevice is not None:
             return self.multidevice.jit_traces
+        if self.spill is not None:
+            return self.spill.jit_traces
         return self._jit_traces
 
 
@@ -664,12 +710,14 @@ def plan(n: int, config: CholeskyConfig | None = None,
             msched = build_multidevice_schedule(
                 layout.nt, config.tb, config.ndev, config.policy,
                 config.cache_slots, pplan, grid=config.grid,
-                lookahead=config.lookahead or 0)
+                lookahead=config.lookahead or 0,
+                host_slots=config.host_slots)
             single = None
         else:
             single = build_schedule(layout.nt, config.tb, config.policy,
                                     config.cache_slots, pplan,
-                                    block=config.block)
+                                    block=config.block,
+                                    host_slots=config.host_slots)
             msched = MultiDeviceSchedule.from_single(single)
         p = CholeskyPlan(n=n, config=config, schedule=msched, _single=single)
         _PLAN_CACHE[key] = p

@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import ml_dtypes
 
-from .schedule import (MultiDeviceSchedule, Op, OpKind, Schedule,
+from .schedule import (HOST_IO, MultiDeviceSchedule, Op, OpKind, Schedule,
                        grid_owner)
 from .precision import PrecisionPlan, assign_precision, tile_norms, uniform_plan
 
@@ -90,8 +90,18 @@ def _np_interpret_op(host: np.ndarray, slots: np.ndarray, op: Op,
     same; BCAST/ALLOC/FREE are bookkeeping-only).  A host-landing RECV
     (``slot_c < 0``, the 2D grid's row-scoped ownership broadcast) moves
     a finalized tile between per-device host slabs; against the replay's
-    *shared* host store it is coherence bookkeeping with no effect."""
-    if op.kind is OpKind.LOAD or op.kind is OpKind.RECV:
+    *shared* host store it is coherence bookkeeping with no effect.
+
+    FETCH/SPILL (the disk tier) delegate to the host store object: a
+    spill schedule is replayed against a
+    :class:`repro.core.spill.SpilledHostStore` instead of the full
+    ``[Nt, Nt, tb, tb]`` array — both support the same ``host[i, j]``
+    tile indexing, so every other branch is tier-agnostic."""
+    if op.kind is OpKind.FETCH:
+        host.fetch(op)
+    elif op.kind is OpKind.SPILL:
+        host.spill(op)
+    elif op.kind is OpKind.LOAD or op.kind is OpKind.RECV:
         if op.slot_c < 0:
             return
         slots[op.slot_c] = _np_round(host[op.i, op.j], lad[op.cls])
@@ -114,15 +124,56 @@ def _np_interpret_op(host: np.ndarray, slots: np.ndarray, op: Op,
             l, slots[op.slot_c].T, lower=True).T
 
 
+def _device_nslots(ops) -> int:
+    return max((max(o.slot_c, o.slot_a, o.slot_b)
+                for o in ops if o.kind not in HOST_IO), default=-1) + 1
+
+
 def run_schedule_numpy(host_tiles: np.ndarray, sched: Schedule) -> np.ndarray:
-    """Interpret the op stream with NumPy.  Returns the factored tile store."""
+    """Interpret the op stream with NumPy.  Returns the factored tile store.
+
+    A spill schedule (``host_slots > 0``) is replayed through a bounded
+    host cache over an in-memory backing store with the disk store's
+    interface — convenient for equivalence tests; use
+    :func:`run_schedule_spill` to drive a real on-disk
+    :class:`~repro.core.spill.DiskTileStore`.
+    """
+    if sched.host_slots > 0:
+        from .spill import ArrayTileStore
+        store = ArrayTileStore(host_tiles)
+        run_schedule_spill(store, sched)
+        return store.to_tiles()
     host = host_tiles.astype(np.float64).copy()
     tb = sched.tb
-    nslots = max(max(o.slot_c, o.slot_a, o.slot_b) for o in sched.ops) + 1
+    nslots = _device_nslots(sched.ops)
     slots = np.zeros((nslots, tb, tb), dtype=np.float64)
     lad = sched.plan.ladder
     for op in sched.ops:
         _np_interpret_op(host, slots, op, lad)
+    return host
+
+
+def run_schedule_spill(store, sched: Schedule):
+    """Replay a spill schedule against a disk-backed tile store in place.
+
+    ``store`` is a :class:`~repro.core.spill.DiskTileStore` (or anything
+    with its tile interface) holding the input matrix tiles; on return it
+    holds the factored tiles.  Host memory use is bounded: one
+    ``[host_slots, tb, tb]`` slab cache plus the device slot buffer.
+    Returns the :class:`~repro.core.spill.SpilledHostStore` (its
+    fetched/spilled byte counters crosscheck the schedule).
+    """
+    from .spill import SpilledHostStore
+    if sched.host_slots < 1:
+        raise ValueError("run_schedule_spill needs a spill schedule "
+                         "(build with host_slots > 0)")
+    host = SpilledHostStore(store, sched.host_slots)
+    slots = np.zeros((_device_nslots(sched.ops), sched.tb, sched.tb),
+                     dtype=np.float64)
+    lad = sched.plan.ladder
+    for op in sched.ops:
+        _np_interpret_op(host, slots, op, lad)
+    store.flush()
     return host
 
 
@@ -136,6 +187,11 @@ def run_multidevice_numpy(host_tiles: np.ndarray,
     order otherwise), so every RECV observes the sender's finalized
     (host-coherent) tile.
     """
+    if msched.host_slots > 0:
+        from .spill import ArrayTileStore
+        store = ArrayTileStore(host_tiles)
+        run_multidevice_spill(store, msched)
+        return store.to_tiles()
     host = host_tiles.astype(np.float64).copy()
     tb = msched.tb
     lad = msched.plan.ladder
@@ -144,6 +200,46 @@ def run_multidevice_numpy(host_tiles: np.ndarray,
     for d, op in msched.iter_column_order():
         _np_interpret_op(host, slots[d], op, lad)
     return host
+
+
+def run_multidevice_spill(store, msched: MultiDeviceSchedule):
+    """Replay a multi-device spill schedule against one shared tile store.
+
+    Each device bounds its own host tier (one
+    :class:`~repro.core.spill.SpilledHostStore` per stream) over the
+    single shared disk store — per-device host accesses are disjoint or
+    replicated-final, so a shared backing tier is coherent.  Unlike the
+    plain replay, the shared-host shortcut for broadcasts is gone: a
+    BCAST snapshots the sender's resident slab onto a wire keyed
+    ``(i, j, k, src)`` (exactly the JAX executor's wire table) and each
+    RECV consumes the wire — into a panel slot (class-rounded) or, for
+    the row-scoped host-landing RECV, into the receiver's own slab.
+    Returns the per-device host stores (fetch/spill counters).
+    """
+    from .spill import SpilledHostStore
+    if msched.host_slots < 1:
+        raise ValueError("run_multidevice_spill needs a spill schedule "
+                         "(build with host_slots > 0)")
+    tb = msched.tb
+    lad = msched.plan.ladder
+    hosts = [SpilledHostStore(store, msched.host_slots)
+             for _ in range(msched.ndev)]
+    slots = [np.zeros((msched.stream_nslots(d), tb, tb), dtype=np.float64)
+             for d in range(msched.ndev)]
+    wires: dict = {}
+    for d, op in msched.iter_dispatch_order():
+        if op.kind is OpKind.BCAST:
+            wires[(op.i, op.j, op.k, op.src)] = np.array(hosts[d][op.i, op.j])
+        elif op.kind is OpKind.RECV:
+            t = wires[(op.i, op.j, op.k, op.src)]
+            if op.slot_c >= 0:
+                slots[d][op.slot_c] = _np_round(t, lad[op.cls])
+            else:
+                hosts[d][op.i, op.j] = t
+        else:
+            _np_interpret_op(hosts[d], slots[d], op, lad)
+    store.flush()
+    return hosts
 
 
 # --------------------------------------------------------------------------
@@ -218,9 +314,13 @@ def make_jax_executor(sched: Schedule, compute_dtype=jnp.float64,
     schedule; everything else (overlap, async copies) is XLA's job — the
     deterministic-schedule insight of the paper moved to trace time.
     """
+    if sched.host_slots > 0:
+        raise ValueError(
+            "make_jax_executor jits over the full host store; a spill "
+            "schedule bounds host residency — use SpillJaxExecutor")
     tb = sched.tb
     lad = sched.plan.ladder
-    nslots = max(max(o.slot_c, o.slot_a, o.slot_b) for o in sched.ops) + 1
+    nslots = _device_nslots(sched.ops)
     kf = _make_kernel_fns(use_pallas, interpret)
 
     def run(host_tiles):
@@ -232,6 +332,143 @@ def make_jax_executor(sched: Schedule, compute_dtype=jnp.float64,
         return host
 
     return run
+
+
+class SpillJaxExecutor:
+    """JAX executor for single-device spill schedules (bounded host tier).
+
+    The stream is split at its FETCH/SPILL ops into maximal device
+    *segments*; each segment is unrolled into one jitted
+    ``(slabs, slots) -> (slabs, slots)`` program where LOAD/STORE address
+    the bounded ``[host_slots, tb, tb]`` slab buffer at trace-time-static
+    slab indices (the tile -> slab map is constant within a segment — it
+    only changes at FETCH ops, which run between segments).  The disk
+    tier itself is driven from Python between segments: a FETCH reads
+    one tile from the :class:`~repro.core.spill.DiskTileStore` into its
+    slab, a SPILL writes one slab back.  Device memory never sees more
+    than ``host_slots + device slots`` tiles; host memory never holds the
+    full store.
+
+    ``jit_traces`` counts segment traces (constant across repeated runs
+    on same-shape stores — the plan-cache amortization contract).
+    """
+
+    def __init__(self, sched: Schedule, compute_dtype=jnp.float64,
+                 use_pallas: bool = False, interpret: bool = True):
+        if sched.host_slots < 1:
+            raise ValueError("SpillJaxExecutor needs a spill schedule "
+                             "(build with host_slots > 0)")
+        self.sched = sched
+        self.compute_dtype = compute_dtype
+        self.jit_traces = 0
+        self._kf = _make_kernel_fns(use_pallas, interpret)
+        self._nslots = _device_nslots(sched.ops)
+        self._segments = self._build_segments()
+
+    def _make_segment(self, ops: list[Op]):
+        lad, cdt, kf = self.sched.plan.ladder, self.compute_dtype, self._kf
+        ops = tuple(ops)
+
+        def seg(slabs, slots):
+            self.jit_traces += 1        # body runs only while tracing
+            for op in ops:
+                if op.kind is OpKind.LOAD:
+                    t = _jx_round(slabs[op.hslot], lad[op.cls], cdt)
+                    slots = slots.at[op.slot_c].set(t)
+                elif op.kind is OpKind.STORE:
+                    r = _jx_round(slots[op.slot_c], lad[op.cls], cdt)
+                    slots = slots.at[op.slot_c].set(r)
+                    slabs = slabs.at[op.hslot].set(r)
+                else:
+                    _, slots = _jx_interpret_op(None, slots, op, lad, kf,
+                                                cdt, None)
+            return slabs, slots
+
+        return jax.jit(seg)
+
+    def _build_segments(self):
+        """Cut the stream at host-IO ops; resolve each LOAD/STORE's slab.
+
+        Segments are keyed by their op tuple including the resolved
+        ``hslot`` attributes, so the static residency decided by the
+        spill post-pass is baked into the traced programs.
+        """
+        import dataclasses as _dc
+
+        @_dc.dataclass(frozen=True)
+        class _SlabOp:
+            """An op plus the host slab its tile occupies (segment-local
+            static metadata; not part of the schedule vocabulary)."""
+            kind: object
+            i: int
+            j: int
+            slot_c: int
+            slot_a: int
+            slot_b: int
+            cls: int
+            hslot: int
+
+        where: dict[tuple[int, int], int] = {}
+        segments = []       # list of ("io", op) | ("run", jitted fn)
+        pending: list = []
+
+        def close_run():
+            if pending:
+                segments.append(("run", self._make_segment(pending)))
+                pending.clear()
+
+        for op in self.sched.ops:
+            if op.kind in HOST_IO:
+                if op.kind is OpKind.FETCH:
+                    # rebind: drop whatever tile held this slab
+                    for t, s in list(where.items()):
+                        if s == op.slot_c:
+                            del where[t]
+                    where[(op.i, op.j)] = op.slot_c
+                close_run()
+                segments.append(("io", op))
+            elif op.kind in (OpKind.LOAD, OpKind.STORE):
+                pending.append(_SlabOp(op.kind, op.i, op.j, op.slot_c,
+                                       op.slot_a, op.slot_b, op.cls,
+                                       where[(op.i, op.j)]))
+            elif op.kind in (OpKind.ALLOC, OpKind.FREE):
+                continue
+            else:
+                pending.append(_SlabOp(op.kind, op.i, op.j, op.slot_c,
+                                       op.slot_a, op.slot_b, op.cls, -1))
+        close_run()
+        return segments
+
+    def run_store(self, store) -> None:
+        """Factor the tile store in place (input tiles -> L tiles)."""
+        sched = self.sched
+        tb, cdt = sched.tb, self.compute_dtype
+        slabs = jnp.zeros((sched.host_slots, tb, tb), dtype=cdt)
+        slots = jnp.zeros((max(self._nslots, 1), tb, tb), dtype=cdt)
+        for kind, item in self._segments:
+            if kind == "io":
+                op = item
+                if op.kind is OpKind.FETCH:
+                    if op.bytes:
+                        slabs = slabs.at[op.slot_c].set(
+                            jnp.asarray(store.read_tile(op.i, op.j),
+                                        dtype=cdt))
+                else:
+                    store.write_tile(
+                        op.i, op.j,
+                        np.asarray(slabs[op.slot_c], dtype=np.float64))
+            else:
+                slabs, slots = item(slabs, slots)
+        store.flush()
+
+    def __call__(self, host_tiles: np.ndarray) -> np.ndarray:
+        """Array-in/array-out convenience: factor a full tile array
+        through an in-memory backing store (tests, the solver path when
+        the caller holds the matrix anyway)."""
+        from .spill import ArrayTileStore
+        store = ArrayTileStore(host_tiles)
+        self.run_store(store)
+        return store.to_tiles()
 
 
 # --------------------------------------------------------------------------

@@ -131,6 +131,14 @@ class OpKind(enum.Enum):
     FREE = "free"
     BCAST = "bcast"      # owner device sends tile (i,j) to all peers
     RECV = "recv"        # peer device receives tile (i,j) into a panel slot
+    FETCH = "fetch"      # disk tile (i,j) -> host slab slot_c (bytes=0: bind
+    #                      the slab without reading — the next op overwrites)
+    SPILL = "spill"      # host slab slot_c -> disk tile (i,j)
+
+
+#: ops that move data on the host<->disk tier; their ``slot_c`` is a *host
+#: slab* index, not a device slot (executors and slot sizing must skip them)
+HOST_IO = frozenset((OpKind.FETCH, OpKind.SPILL))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,12 +172,19 @@ class Schedule:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    host_slots: int = 0      # >0: host cache bounded, SPILL/FETCH in stream
 
     def loads_bytes(self) -> int:
         return sum(o.bytes for o in self.ops if o.kind is OpKind.LOAD)
 
     def stores_bytes(self) -> int:
         return sum(o.bytes for o in self.ops if o.kind is OpKind.STORE)
+
+    def fetch_bytes(self) -> int:
+        return sum(o.bytes for o in self.ops if o.kind is OpKind.FETCH)
+
+    def spill_bytes(self) -> int:
+        return sum(o.bytes for o in self.ops if o.kind is OpKind.SPILL)
 
     def flops(self) -> float:
         """Model FLOPs of the factorization: n^3/3 for the full matrix."""
@@ -180,9 +195,16 @@ class Schedule:
         return sum(1 for o in self.ops if o.kind is kind)
 
     def digest(self) -> str:
-        """Content hash of the op stream (golden-schedule regression)."""
+        """Content hash of the op stream (golden-schedule regression).
+
+        A spill schedule (``host_slots > 0``) folds the host-slab budget
+        in as executor-facing metadata — the slab buffer the executors
+        size from it is as execution-visible as an op; plain schedules
+        hash ops only so historical digests stay valid."""
         import hashlib
         h = hashlib.sha256()
+        if self.host_slots > 0:
+            h.update(f"|hslots{self.host_slots}|".encode())
         _ops_digest_update(h, self.ops)
         return h.hexdigest()[:16]
 
@@ -277,6 +299,86 @@ class _CacheTable:
             self.free.append(s)
 
 
+def with_host_cache(ops: list[Op], tb: int, host_slots: int) -> list[Op]:
+    """Bound a stream's host residency to ``host_slots`` slabs (disk tier).
+
+    The third-tier analogue of the device cache table: the host store is
+    no longer the full ``[Nt, Nt, tb, tb]`` array but a bounded cache of
+    ``host_slots`` fp64 slabs over a disk-backed tile store
+    (:class:`repro.core.spill.DiskTileStore`).  This post-pass replays
+    the stream's host accesses through an LRU slab table and interleaves
+    the tier traffic as explicit ops — the same ahead-of-time treatment
+    Algorithm 3 gives device residency:
+
+    * a host *read* (LOAD of an operand, BCAST publishing a tile) of a
+      non-resident tile emits ``FETCH`` (disk -> slab, full tile bytes);
+    * a host *write* (STORE, host-landing RECV) of a non-resident tile
+      emits a binding ``FETCH`` with ``bytes = 0`` — the write fully
+      overwrites the slab, so nothing is read from disk;
+    * evicting a dirty slab (written since it was bound) emits ``SPILL``
+      (slab -> disk); clean slabs are dropped for free;
+    * at stream end every dirty resident slab is spilled, so the disk
+      store finishes coherent and the scheduled SPILL/FETCH byte totals
+      are exact ahead of time (the simulator's disk lane and the
+      executors replay precisely these ops).
+
+    Host slabs always hold the fp64 host representation (8 bytes/elem),
+    whatever the tile's precision class: the class cast happens on the
+    device edge (LOAD/STORE), exactly as with the unbounded host store.
+    """
+    if host_slots < 1:
+        raise ValueError(f"host_slots must be >= 1, got {host_slots}")
+    import collections
+    slab_bytes = 8 * tb * tb
+    out: list[Op] = []
+    where: dict[tuple[int, int], int] = {}     # tile -> slab
+    tile_of: list[Optional[tuple[int, int]]] = [None] * host_slots
+    dirty = [False] * host_slots
+    free = list(range(host_slots - 1, -1, -1))
+    lru = collections.OrderedDict()            # slab -> None, LRU first
+
+    def touch(s: int):
+        lru[s] = None
+        lru.move_to_end(s)
+
+    def ensure(i: int, j: int, k: int, read: bool):
+        s = where.get((i, j))
+        if s is not None:
+            touch(s)
+            return
+        s = free.pop() if free else next(iter(lru))
+        old = tile_of[s]
+        if old is not None:
+            if dirty[s]:
+                out.append(Op(OpKind.SPILL, i=old[0], j=old[1], slot_c=s,
+                              bytes=slab_bytes, k=k))
+            del where[old]
+            lru.pop(s, None)
+        out.append(Op(OpKind.FETCH, i=i, j=j, slot_c=s,
+                      bytes=slab_bytes if read else 0, k=k))
+        tile_of[s] = (i, j)
+        where[(i, j)] = s
+        dirty[s] = False
+        touch(s)
+
+    last_k = 0
+    for op in ops:
+        if op.k >= 0:
+            last_k = op.k
+        if op.kind is OpKind.LOAD or op.kind is OpKind.BCAST:
+            ensure(op.i, op.j, op.k, read=True)
+        elif op.kind is OpKind.STORE or (op.kind is OpKind.RECV
+                                         and op.slot_c < 0):
+            ensure(op.i, op.j, op.k, read=False)
+            dirty[where[(op.i, op.j)]] = True
+        out.append(op)
+    for s in range(host_slots):
+        if tile_of[s] is not None and dirty[s]:
+            out.append(Op(OpKind.SPILL, i=tile_of[s][0], j=tile_of[s][1],
+                          slot_c=s, bytes=slab_bytes, k=last_k))
+    return out
+
+
 def build_schedule(
     nt: int,
     tb: int,
@@ -284,11 +386,16 @@ def build_schedule(
     cache_slots: int = 0,
     plan: PrecisionPlan | None = None,
     block: tuple = (4, 4),
+    host_slots: int = 0,
 ) -> Schedule:
     """Emit the static op stream for one left-looking tile Cholesky.
 
     ``v4`` is the beyond-paper 2D-blocked left-looking variant (see
     :func:`_build_v4`); ``block=(h, w)`` are its row/column block sizes.
+    ``host_slots > 0`` bounds the host tier to that many fp64 tile slabs
+    over a disk-backed store and interleaves the SPILL/FETCH traffic
+    into the stream (:func:`with_host_cache`); 0 keeps the historical
+    unbounded host store (no disk tier, digests unchanged).
     """
     policy = policy.lower()
     if policy not in ("sync", "async", "v1", "v2", "v3", "v4"):
@@ -297,10 +404,22 @@ def build_schedule(
         plan = uniform_plan(nt)
     if plan.classes.shape[0] != nt:
         raise ValueError("precision plan Nt mismatch")
+    if host_slots < 0:
+        raise ValueError(f"host_slots must be >= 0, got {host_slots}")
     if policy == "v4":
-        return _build_v4(nt, tb, plan, cache_slots, block)
+        sched = _build_v4(nt, tb, plan, cache_slots, block)
+        if host_slots > 0:
+            sched.ops = with_host_cache(sched.ops, tb, host_slots)
+            sched.host_slots = host_slots
+        return sched
     if cache_slots <= 0:
         cache_slots = default_cache_slots(policy, nt)
+
+    def finish(sched: Schedule) -> Schedule:
+        if host_slots > 0:
+            sched.ops = with_host_cache(sched.ops, tb, host_slots)
+            sched.host_slots = host_slots
+        return sched
 
     ops: list[Op] = []
     emit = ops.append
@@ -364,7 +483,7 @@ def build_schedule(
                     emit(Op(OpKind.FREE, slot_c=1, k=k))
         sched = Schedule(ops, nt, tb, policy, cache_slots, plan)
         sched.misses = sched.count(OpKind.LOAD)
-        return sched
+        return finish(sched)
 
     if not operand_cache:
         # ---- V1: accumulator reuse only, no cache table ----
@@ -388,7 +507,7 @@ def build_schedule(
                 store(m, k, c, k)
         sched = Schedule(ops, nt, tb, policy, cache_slots, plan)
         sched.misses = sched.count(OpKind.LOAD)
-        return sched
+        return finish(sched)
 
     # ---- V2/V3: accumulator reuse + cache table for operands ----
     for k in range(nt):
@@ -428,7 +547,7 @@ def build_schedule(
     sched = Schedule(ops, nt, tb, policy, cache_slots, plan,
                      hits=cache.hits, misses=cache.misses,
                      evictions=cache.evictions)
-    return sched
+    return finish(sched)
 
 
 def _build_v4(nt: int, tb: int, plan: PrecisionPlan, cache_slots: int,
@@ -590,6 +709,8 @@ class MultiDeviceSchedule:
     lookahead: int = 0       # pipelined-panel depth (0 = column-major)
     dispatch: Optional[list] = None  # (dev, start, stop, k, phase) chunks;
     #                          None = derivable column-major order
+    host_slots: int = 0      # >0: per-device host cache bounded to this many
+    #                          slabs; streams carry SPILL/FETCH disk-tier ops
 
     def __post_init__(self):
         if not self.grid:
@@ -602,13 +723,16 @@ class MultiDeviceSchedule:
         return cls(streams=[list(sched.ops)], nt=sched.nt, tb=sched.tb,
                    ndev=1, policy=sched.policy, cache_slots=sched.cache_slots,
                    plan=sched.plan, hits=[sched.hits], misses=[sched.misses],
-                   evictions=[sched.evictions])
+                   evictions=[sched.evictions], host_slots=sched.host_slots)
 
     def stream_nslots(self, dev: int) -> int:
         """Slot-buffer length device ``dev``'s stream requires (cache slots
-        actually referenced plus its RECV panel region)."""
+        actually referenced plus its RECV panel region).  FETCH/SPILL ops
+        address *host slabs* through ``slot_c``, not device slots, so they
+        are excluded."""
         return max((max(o.slot_c, o.slot_a, o.slot_b)
-                    for o in self.streams[dev]), default=-1) + 1
+                    for o in self.streams[dev] if o.kind not in HOST_IO),
+                   default=-1) + 1
 
     def to_single(self) -> Schedule:
         """Flat single-device view; only valid for the ndev=1 degenerate."""
@@ -621,7 +745,8 @@ class MultiDeviceSchedule:
                         self.cache_slots, self.plan,
                         hits=self.hits[0] if self.hits else 0,
                         misses=self.misses[0] if self.misses else 0,
-                        evictions=self.evictions[0] if self.evictions else 0)
+                        evictions=self.evictions[0] if self.evictions else 0,
+                        host_slots=self.host_slots)
 
     def _bytes(self, kind: OpKind, dev: Optional[int]) -> int:
         streams = self.streams if dev is None else [self.streams[dev]]
@@ -636,6 +761,12 @@ class MultiDeviceSchedule:
     def bcast_bytes(self) -> int:
         """Total interconnect volume = sum of per-receiver RECV bytes."""
         return self._bytes(OpKind.RECV, None)
+
+    def fetch_bytes(self, dev: Optional[int] = None) -> int:
+        return self._bytes(OpKind.FETCH, dev)
+
+    def spill_bytes(self, dev: Optional[int] = None) -> int:
+        return self._bytes(OpKind.SPILL, dev)
 
     def count(self, kind: OpKind, dev: Optional[int] = None) -> int:
         streams = self.streams if dev is None else [self.streams[dev]]
@@ -660,6 +791,11 @@ class MultiDeviceSchedule:
         """
         import hashlib
         h = hashlib.sha256()
+        if self.host_slots > 0:
+            # the host-slab budget is executor-facing metadata for any
+            # ndev (same prefix as Schedule.digest so the ndev=1
+            # degenerate keeps matching the planner's digest)
+            h.update(f"|hslots{self.host_slots}|".encode())
         if self.ndev > 1:
             h.update(f"|panel{self.panel_base}|".encode())
             if self.grid[1] > 1:
@@ -763,6 +899,7 @@ def build_multidevice_schedule(
     plan: PrecisionPlan | None = None,
     grid: tuple | None = None,
     lookahead: int = 0,
+    host_slots: int = 0,
 ) -> MultiDeviceSchedule:
     """Emit per-device op streams for the block-cyclic tile Cholesky.
 
@@ -821,6 +958,14 @@ def build_multidevice_schedule(
     if lookahead > 0 and ndev < 2:
         raise ValueError("lookahead pipelines panels across devices; "
                          "it needs ndev > 1")
+    if host_slots < 0:
+        raise ValueError(f"host_slots must be >= 0, got {host_slots}")
+    if host_slots > 0 and lookahead > 0:
+        raise ValueError(
+            "host_slots (the disk spill tier) is not supported with "
+            "lookahead > 0: the spill post-pass inserts ops into each "
+            "stream, which would invalidate the pipelined emitter's "
+            "explicit dispatch-chunk indices")
     if cache_slots <= 0:
         cache_slots = default_cache_slots(policy, nt, multidevice=True,
                                           lookahead=lookahead)
@@ -836,11 +981,18 @@ def build_multidevice_schedule(
     from .taskgraph import emit_pipelined_streams
     streams, dispatch, caches = emit_pipelined_streams(
         nt, tb, ndev, policy, cache_slots, plan, grid, lookahead)
+    if host_slots > 0:
+        # per-device host tier: each device bounds its own slab cache over
+        # the shared disk store.  Host accesses are disjoint across
+        # devices (a device LOADs/STOREs only owned rows; row-scoped
+        # RECVs land in the receiver's own stream), so the per-stream
+        # rewrite composes without cross-stream coordination.
+        streams = [with_host_cache(s, tb, host_slots) for s in streams]
 
     msched = MultiDeviceSchedule(streams, nt, tb, ndev, policy, cache_slots,
                                  plan, panel_base=cache_slots if ndev > 1
                                  else -1, grid=grid, lookahead=lookahead,
-                                 dispatch=dispatch)
+                                 dispatch=dispatch, host_slots=host_slots)
     if operand_cache:
         msched.hits = [c.hits for c in caches]
         msched.misses = [c.misses for c in caches]

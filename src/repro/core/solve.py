@@ -110,9 +110,24 @@ def cho_solve_tiles(tiles: np.ndarray, b: np.ndarray,
 
 
 def logdet_tiles(tiles: np.ndarray) -> float:
-    """``log|A| = 2 sum_i log L_ii`` from the diagonal tiles."""
+    """``log|A| = 2 sum_i log L_ii`` from the diagonal tiles.
+
+    A valid Cholesky factor has strictly positive diagonal entries; a
+    non-positive entry means the factorization failed upstream (loss of
+    positive definiteness, e.g. under an MxP ladder too aggressive for
+    the matrix) and ``log`` would silently produce NaN/-inf.
+    """
     nt = tiles.shape[0]
     acc = 0.0
     for i in range(nt):
-        acc += float(np.sum(np.log(np.diag(tiles[i, i]))))
+        d = np.diag(tiles[i, i])
+        if not np.all(d > 0.0):
+            bad = np.flatnonzero(~(d > 0.0))
+            raise ValueError(
+                f"logdet: diagonal tile ({i}, {i}) has non-positive "
+                f"diagonal entries at local indices {bad.tolist()} "
+                f"(min value {d.min()!r}); the factor is not a valid "
+                "Cholesky factor — the factorization lost positive "
+                "definiteness (e.g. precision ladder too aggressive)")
+        acc += float(np.sum(np.log(d)))
     return 2.0 * acc

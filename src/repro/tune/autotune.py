@@ -218,6 +218,12 @@ def _matches_pins(cached: CholeskyConfig, requested: CholeskyConfig,
         # same contract for the pipeline depth: open (None) accepts any
         # searched winner, a pinned depth must be honoured exactly
         return False
+    if (requested.host_slots > 0
+            and cached.host_slots != requested.host_slots):
+        # a pinned host-slab budget must come back exactly; 0 leaves the
+        # spill tier to the search (engaged only when the full store
+        # overflows the model's host memory)
+        return False
     if requested.block != cached.block:
         # a non-default block changes the v4 candidates the cached search
         # saw (and a cached v4 winner with another block violates the

@@ -18,6 +18,9 @@ model transferable).  This module times, on the live JAX backend:
   * jit launch overhead and buffer-allocation overhead;
   * device memory capacity (``memory_stats()`` where the backend exposes
     it, a conservative fallback otherwise);
+  * disk sequential read/write bandwidth (tmpfile probe on the spill
+    tier's filesystem) and physical host RAM — the lanes/capacity the
+    disk-tier simulation and the tuner's ``host_slots`` axis consume;
 
 and returns a frozen :class:`HardwareModel` with ``source="measured"``
 and a :func:`hardware_fingerprint` identity hash that keys the tuning
@@ -30,6 +33,8 @@ the CPU CI smoke leg, honest enough to rank schedule candidates.
 from __future__ import annotations
 
 import hashlib
+import os
+import tempfile
 import time
 
 import numpy as np
@@ -212,6 +217,49 @@ def _measure_overheads(repeats: int) -> tuple[float, float]:
     return launch, alloc
 
 
+def _measure_disk_bandwidth(sizes_mb, repeats: int,
+                            directory: str | None = None
+                            ) -> tuple[float, float]:
+    """Sequential (read_bw, write_bw) bytes/s of the filesystem holding
+    the spill tier's tile store.
+
+    Writes fsync to make the number honest for SPILL durability; reads
+    go through the page cache (so the measured read rate is the *replay's*
+    effective rate — a FETCH of a recently spilled tile is usually warm —
+    not the device's cold-read floor).  ``directory`` targets the
+    filesystem the :class:`~repro.core.spill.DiskTileStore` will live on
+    (default: the system tmpdir)."""
+    read_bw = write_bw = 0.0
+    with tempfile.TemporaryDirectory(dir=directory) as td:
+        path = os.path.join(td, "disk_probe.bin")
+        for mb in sizes_mb:
+            nbytes = int(mb * 1e6)
+            buf = bytes(nbytes)
+
+            def wr():
+                with open(path, "wb") as f:
+                    f.write(buf)
+                    f.flush()
+                    os.fsync(f.fileno())
+
+            def rd():
+                with open(path, "rb") as f:
+                    return f.read()
+
+            write_bw = max(write_bw, nbytes / _best_seconds(wr, repeats))
+            read_bw = max(read_bw, nbytes / _best_seconds(rd, repeats))
+    return read_bw, write_bw
+
+
+def _host_mem_bytes() -> float:
+    """Physical host RAM (``os.sysconf``); 0.0 where unavailable —
+    the search then treats host memory as unbounded."""
+    try:
+        return float(os.sysconf("SC_PAGE_SIZE") * os.sysconf("SC_PHYS_PAGES"))
+    except (AttributeError, OSError, ValueError):
+        return 0.0
+
+
 def _device_mem_bytes() -> float:
     """Device memory capacity, from the backend when it reports one."""
     import jax
@@ -229,7 +277,8 @@ def calibrate(tb: int = 256,
               repeats: int = 3,
               transfer_sizes_mb=(1, 8, 32),
               mem_bytes: float | None = None,
-              name: str | None = None) -> HardwareModel:
+              name: str | None = None,
+              disk_dir: str | None = None) -> HardwareModel:
     """Measure the live backend and return a ``source="measured"`` model.
 
     The result plugs into everything the datasheet presets do —
@@ -251,6 +300,8 @@ def calibrate(tb: int = 256,
     kernel_flops = _measure_kernels(tb, classes, repeats)
     h2d_bw, d2h_bw = _measure_bandwidth(transfer_sizes_mb, repeats)
     link_bw = _measure_link_bandwidth(transfer_sizes_mb, repeats)
+    disk_read_bw, disk_write_bw = _measure_disk_bandwidth(
+        transfer_sizes_mb, repeats, directory=disk_dir)
     launch, alloc = _measure_overheads(repeats)
     fp = hardware_fingerprint()
     dev = jax.devices()[0]
@@ -271,6 +322,9 @@ def calibrate(tb: int = 256,
         source="measured",
         fingerprint=fp,
         kernel_flops=kernel_flops,
+        disk_read_bw=disk_read_bw,
+        disk_write_bw=disk_write_bw,
+        host_mem_bytes=_host_mem_bytes(),
     )
 
 

@@ -59,6 +59,8 @@ class Candidate:
     stores_bytes: int
     link_bytes: int = 0          # interconnect volume (ndev > 1)
     footprint_bytes: int = 0     # device slot-buffer bytes the config needs
+    fetch_bytes: int = 0         # disk lane volume (host_slots > 0)
+    spill_bytes: int = 0
 
     def row(self) -> dict:
         """Flat machine-readable record (bench JSON / TuneResult table)."""
@@ -68,11 +70,14 @@ class Candidate:
             "ndev": c.ndev,
             "grid": list(c.grid) if c.grid else [c.ndev, 1],
             "lookahead": c.lookahead or 0,
+            "host_slots": c.host_slots,
             "makespan_s": self.makespan,
             "tflops": self.tflops, "loads_bytes": self.loads_bytes,
             "stores_bytes": self.stores_bytes,
             "link_bytes": self.link_bytes,
             "footprint_bytes": self.footprint_bytes,
+            "fetch_bytes": self.fetch_bytes,
+            "spill_bytes": self.spill_bytes,
         }
 
 
@@ -146,6 +151,28 @@ def slot_candidates(policy: str, nt: int, tb: int, hw: HardwareModel,
     return sorted({max(s, mn) for s in (mn, min(default, cap), useful_max)})
 
 
+def host_slot_candidates(nt: int, tb: int, hw: HardwareModel) -> list[int]:
+    """Host-slab budgets worth scoring for one tile grid.
+
+    ``[0]`` (host-resident store, no spill tier) whenever the full
+    ``[nt, nt]`` tile store fits ``host_mem_bytes`` (or the capacity is
+    unknown); once it overflows, spilling is mandatory and two probes
+    bound the interesting range: a lean column working set (``nt + 2``
+    slabs — the panel streams through, updates thrash) and the
+    memory-capped maximum (as host-resident as the machine allows).
+    Empty when not even one slab fits — no feasible config at this tb.
+    """
+    store_bytes = 8 * (nt * tb) ** 2
+    if hw.host_mem_bytes <= 0 or store_bytes <= hw.host_mem_bytes:
+        return [0]
+    cap = hw.max_host_slots(tb)
+    if cap < 1:
+        return []
+    # nt*(nt+1)//2 slabs hold every lower tile: past that, extra slabs
+    # cannot remove a single FETCH
+    return sorted({min(nt + 2, cap), min(cap, nt * (nt + 1) // 2)})
+
+
 def is_feasible(n: int, config: CholeskyConfig, hw: HardwareModel) -> bool:
     """The exact predicate the search promises of every returned config."""
     if config.tb < 1 or n % config.tb:
@@ -156,25 +183,34 @@ def is_feasible(n: int, config: CholeskyConfig, hw: HardwareModel) -> bool:
         return False
     if config.cache_slots < min_cache_slots(config.policy, config.block, la):
         return False
+    if config.host_slots > 0:
+        # eager config validation already rejects host_slots with
+        # lookahead; here only the host-memory cap can fail
+        if config.host_slots > hw.max_host_slots(config.tb):
+            return False
+    elif hw.host_mem_bytes > 0 and 8 * n * n > hw.host_mem_bytes:
+        # no spill tier and the full tile store overflows host memory
+        return False
     reserve = (TileLayout(n, config.tb).panel_slots(la)
                if config.ndev > 1 else 0)
     return config.cache_slots <= hw.max_cache_slots(config.tb, reserve)
 
 
 def _score(n, tb, policy, slots, pplan, ndev, hw, base: CholeskyConfig,
-           grid=None, lookahead=0):
+           grid=None, lookahead=0, host_slots=0):
     nt = n // tb
     if ndev > 1:
         msched = build_multidevice_schedule(nt, tb, ndev, policy, slots,
                                             pplan, grid=grid,
-                                            lookahead=lookahead)
+                                            lookahead=lookahead,
+                                            host_slots=host_slots)
         r = simulate_multi(msched, hw)
         loads, stores = msched.loads_bytes(), msched.stores_bytes()
         link = r.link_bytes
         nslots = max(msched.stream_nslots(d) for d in range(ndev))
     else:
         sched = build_schedule(nt, tb, policy, slots, pplan,
-                               block=base.block)
+                               block=base.block, host_slots=host_slots)
         r = simulate(sched, hw)
         loads, stores = sched.loads_bytes(), sched.stores_bytes()
         link = 0
@@ -185,6 +221,7 @@ def _score(n, tb, policy, slots, pplan, ndev, hw, base: CholeskyConfig,
         # the winner pins the searched depth (0 included) so a db
         # round-trip replays the same schedule; ndev=1 has no pipeline
         lookahead=lookahead if ndev > 1 else None,
+        host_slots=host_slots,
         # a custom v4 block must not ride along into non-v4 candidates
         block=base.block if policy == "v4" else _DEFAULT_BLOCK,
         plan=pplan if pplan is not None and not _is_uniform_f64(pplan)
@@ -192,7 +229,8 @@ def _score(n, tb, policy, slots, pplan, ndev, hw, base: CholeskyConfig,
     return Candidate(config=cfg, makespan=r.makespan, tflops=r.tflops,
                      loads_bytes=loads, stores_bytes=stores,
                      link_bytes=link,
-                     footprint_bytes=nslots * tb * tb * 8)
+                     footprint_bytes=nslots * tb * tb * 8,
+                     fetch_bytes=r.fetch_bytes, spill_bytes=r.spill_bytes)
 
 
 def _is_uniform_f64(pplan: PrecisionPlan) -> bool:
@@ -216,7 +254,8 @@ def score_config(n: int, config: CholeskyConfig,
     pplan = config.plan or uniform_plan(nt, "f64", config.ladder)
     return _score(n, config.tb, config.policy, slots, pplan, config.ndev,
                   hw, config, grid=config.grid,
-                  lookahead=config.lookahead or 0)
+                  lookahead=config.lookahead or 0,
+                  host_slots=config.host_slots)
 
 
 def search(n: int,
@@ -231,7 +270,11 @@ def search(n: int,
     policies, ``cache_slots=0`` searches slot budgets, and (for
     ``ndev > 1``) ``grid=None`` searches every ``(p, q)`` factorization
     of ``ndev`` while ``lookahead=None`` searches pipeline depths
-    ``{0, 1, 2}``; a concrete value freezes that axis.  ``plans_by_tb``
+    ``{0, 1, 2}``; a concrete value freezes that axis.  The disk tier is
+    its own axis: ``host_slots=0`` scores host-resident candidates
+    unless the full tile store overflows ``hw.host_mem_bytes``, in which
+    case spill budgets are probed (:func:`host_slot_candidates`); a
+    pinned ``host_slots > 0`` is honoured exactly.  ``plans_by_tb``
     optionally maps tile size -> :class:`PrecisionPlan` (built from a
     representative matrix by :func:`repro.tune.tune`) to score
     mixed-precision candidates; absent entries score uniform f64.
@@ -302,6 +345,13 @@ def search(n: int,
             pplan = plans_by_tb[tb]
         else:
             pplan = uniform_plan(nt, "f64", base.ladder)
+        if base.host_slots > 0:
+            hs_opts = ([base.host_slots]
+                       if base.host_slots <= hw.max_host_slots(tb) else [])
+        else:
+            # the spill tier engages only when the full tile store
+            # overflows the model's host memory (otherwise [0])
+            hs_opts = host_slot_candidates(nt, tb, hw)
         for policy in policies:
             for la in lookaheads:
                 if la >= nt:
@@ -323,11 +373,15 @@ def search(n: int,
                 else:
                     slot_opts = slot_candidates(policy, nt, tb, hw, ndev,
                                                 base.block, lookahead=la)
-                for slots in slot_opts:
-                    for grid in grids:
-                        candidates.append(
-                            _score(n, tb, policy, slots, pplan, ndev, hw,
-                                   base, grid=grid, lookahead=la))
+                for hs in hs_opts:
+                    if hs > 0 and la > 0:
+                        continue    # spill post-pass excludes pipelining
+                    for slots in slot_opts:
+                        for grid in grids:
+                            candidates.append(
+                                _score(n, tb, policy, slots, pplan, ndev,
+                                       hw, base, grid=grid, lookahead=la,
+                                       host_slots=hs))
     if not candidates:
         raise ValueError(
             f"no feasible (policy, cache_slots) candidate for n={n} on "
@@ -335,11 +389,13 @@ def search(n: int,
             f"slot minimums or the device-memory cap")
     candidates.sort(key=lambda c: (
         c.makespan,
-        c.loads_bytes + c.stores_bytes + c.link_bytes,
+        c.loads_bytes + c.stores_bytes + c.link_bytes
+        + c.fetch_bytes + c.spill_bytes,
         _POLICY_RANK[c.config.policy],
         -c.config.tb,
         c.config.cache_slots,
         c.config.lookahead or 0,     # shallower pipeline on ties
+        c.config.host_slots,         # leaner host tier on ties
         c.config.grid or (c.config.ndev, 1),
     ))
     return TuneResult(n=n, ndev=ndev, hw=hw, candidates=candidates,

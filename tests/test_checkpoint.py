@@ -1,0 +1,279 @@
+"""Checkpoint manager repairs + restartable disk-tier factorization.
+
+The manager half pins the bugfixes: re-saving an existing step (atomic
+``os.replace`` over a stale dir), retention math (``keep`` newest, with
+``keep=0`` rejected at construction), the multi-process save protocol
+(every process writes its ``host_<p>.npz``, process 0 alone commits),
+``latest_step`` ignoring ``.tmp`` leftovers, and a clear
+``FileNotFoundError`` for a missing requested step.
+
+The restart half drives :class:`repro.RestartableFactorization` over a
+real on-disk :class:`repro.DiskTileStore`: a run killed at *any* point —
+column boundary, mid-column (journal rollback), or twice — resumes from
+the latest checkpoint and produces a factor **bit-identical** to an
+uninterrupted run.  A checkpoint saved under a different schedule digest
+is refused.
+"""
+import os
+import signal
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import (CheckpointManager, RestartableFactorization,
+                              TileJournal)
+from repro.core.cholesky import run_schedule_numpy
+from repro.core.schedule import build_schedule
+from repro.core.spill import DiskTileStore
+from repro.core.tiling import random_spd, to_tiles
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "slots": rng.standard_normal((3, 4, 4)),            # float64
+        "scales": rng.standard_normal(5).astype(np.float32),
+        "counts": np.arange(7, dtype=np.int32),
+        "nested": {"bias": rng.standard_normal((2, 2))},
+    }
+
+
+def _zeros_like_tree(t):
+    return jax.tree_util.tree_map(lambda a: np.zeros_like(a), t)
+
+
+def _assert_tree_equal(a, b):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        assert x.dtype == y.dtype          # dtype-preserving round-trip
+        assert np.array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Manager: round-trip, re-save, retention, multi-process, errors
+
+def test_roundtrip_preserves_values_and_dtypes(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree(1)
+    m.save(4, tree, extra={"column": 4, "digest": "abc"})
+    got, extra = m.restore(_zeros_like_tree(tree))
+    _assert_tree_equal(got, tree)
+    assert extra == {"column": 4, "digest": "abc"}
+    assert m.latest_step() == 4
+
+
+def test_resave_of_existing_step_overwrites(tmp_path):
+    """Regression: save() used to crash with OSError when the step dir
+    already existed (os.replace cannot overwrite a non-empty dir)."""
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(2, _tree(1))
+    m.save(2, _tree(9))                     # resume path re-saves step 2
+    got, _ = m.restore(_zeros_like_tree(_tree()), step=2)
+    _assert_tree_equal(got, _tree(9))
+
+
+@pytest.mark.parametrize("keep", [1, 3])
+def test_retention_keeps_newest(tmp_path, keep):
+    m = CheckpointManager(str(tmp_path), keep=keep)
+    for step in range(5):
+        m.save(step, _tree(step))
+    kept = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path)
+                  if n.startswith("step_") and not n.endswith(".tmp"))
+    assert kept == list(range(5 - keep, 5))
+    assert m.latest_step() == 4
+
+
+def test_keep_zero_rejected(tmp_path):
+    """Regression: keep=0 used to garbage-collect *every* checkpoint
+    (steps[:-0] == the whole list)."""
+    with pytest.raises(ValueError, match="keep must be >= 1"):
+        CheckpointManager(str(tmp_path), keep=0)
+
+
+def test_latest_step_ignores_tmp_leftovers(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(1, _tree())
+    os.makedirs(tmp_path / "step_00000007.tmp")   # crashed mid-save
+    assert m.latest_step() == 1
+
+
+def test_restore_missing_step_raises(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(1, _tree())
+    with pytest.raises(FileNotFoundError, match="no checkpoint for step 5"):
+        m.restore(_zeros_like_tree(_tree()), step=5)
+
+
+def test_restore_empty_directory_returns_none(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    assert m.restore(_zeros_like_tree(_tree())) == (None, None)
+    assert m.latest_step() is None
+
+
+def test_multiprocess_save_protocol(tmp_path, monkeypatch):
+    """Regression: a non-zero process used to crash creating the tmp dir
+    (only proc 0 made it), and every process wrote meta.json.  Now each
+    process writes its own host_<p>.npz and proc 0 alone writes the
+    shared metadata and commits the rename."""
+    m = CheckpointManager(str(tmp_path), keep=3)
+    t0, t1 = _tree(0), _tree(1)
+
+    monkeypatch.setattr(jax, "process_index", lambda: 1)
+    m.save(3, t1, extra={"x": 1})           # non-zero proc saves FIRST
+    tmp = tmp_path / "step_00000003.tmp"
+    assert (tmp / "host_1.npz").exists()
+    assert not (tmp / "meta.json").exists()             # proc 0's job
+    assert m.latest_step() is None                      # not committed
+
+    monkeypatch.setattr(jax, "process_index", lambda: 0)
+    m.save(3, t0, extra={"x": 1})           # proc 0 commits atomically
+    final = tmp_path / "step_00000003"
+    assert not tmp.exists() and final.is_dir()
+    assert {p.name for p in final.iterdir()} == \
+        {"host_0.npz", "host_1.npz", "meta.json", "extra.json"}
+
+    got0, _ = m.restore(_zeros_like_tree(t0), step=3)
+    _assert_tree_equal(got0, t0)
+    monkeypatch.setattr(jax, "process_index", lambda: 1)
+    got1, _ = m.restore(_zeros_like_tree(t1), step=3)
+    _assert_tree_equal(got1, t1)            # each proc reads its own file
+
+
+def test_save_on_signal_requests_save(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    old = signal.getsignal(signal.SIGTERM)
+    try:
+        m.save_on_signal()
+        assert not m.should_save_now
+        signal.raise_signal(signal.SIGTERM)
+        assert m.should_save_now
+        m.save(0, _tree())                  # save clears the request
+        assert not m.should_save_now
+    finally:
+        signal.signal(signal.SIGTERM, old)
+
+
+# ---------------------------------------------------------------------------
+# Tile journal
+
+def test_journal_rollback_restores_first_write(tmp_path):
+    store = DiskTileStore.create(str(tmp_path / "t.npy"), nt=2, tb=4)
+    store.write_tile(0, 0, np.full((4, 4), 7.0))
+    j = TileJournal(str(tmp_path / "j"))
+    j.begin_epoch(0)
+    j.journal(0, 0, store.read_tile(0, 0))
+    store.write_tile(0, 0, np.full((4, 4), 1.0))
+    j.journal(0, 0, store.read_tile(0, 0))  # second journal: ignored
+    store.write_tile(0, 0, np.full((4, 4), 2.0))
+    assert j.rollback(store, 0) == 1
+    assert np.array_equal(store.read_tile(0, 0), np.full((4, 4), 7.0))
+
+
+def test_journal_begin_epoch_drops_older(tmp_path):
+    j = TileJournal(str(tmp_path / "j"))
+    j.begin_epoch(0)
+    j.journal(0, 1, np.zeros((4, 4)))
+    j.begin_epoch(1)
+    store = DiskTileStore.create(str(tmp_path / "t.npy"), nt=2, tb=4)
+    assert j.rollback(store, 0) == 0        # epoch 0 entries dropped
+    assert j.rollback(store, 1) == 0        # new epoch starts empty
+
+
+# ---------------------------------------------------------------------------
+# Restartable factorization: kill-and-resume is bit-identical
+
+_N, _TB, _HSLOTS = 96, 16, 4
+
+
+def _setup(tmp_path, host_slots=_HSLOTS, policy="v3"):
+    a = random_spd(_N, seed=7)
+    sched = build_schedule(_N // _TB, _TB, policy, host_slots=host_slots)
+    store = DiskTileStore.from_matrix(str(tmp_path / "store.npy"), a, _TB)
+    ref = run_schedule_numpy(to_tiles(a, _TB), sched)   # uninterrupted
+    return a, sched, store, ref
+
+
+def _resume(tmp_path, sched):
+    """Fresh objects, as a new process after a kill would build them."""
+    store = DiskTileStore.open(str(tmp_path / "store.npy"))
+    manager = CheckpointManager(str(tmp_path / "ckpt"), keep=3)
+    return RestartableFactorization(sched, store, manager)
+
+
+def test_uninterrupted_run_matches_plain_replay(tmp_path):
+    _, sched, store, ref = _setup(tmp_path)
+    rf = RestartableFactorization(
+        sched, store, CheckpointManager(str(tmp_path / "ckpt"), keep=3))
+    assert rf.run() is True
+    assert np.array_equal(rf.result_tiles(), ref)       # bit-identical
+    assert rf.run() is True                             # idempotent
+
+
+def test_kill_at_column_boundary_resumes_bit_identical(tmp_path):
+    _, sched, store, ref = _setup(tmp_path)
+    rf = RestartableFactorization(
+        sched, store, CheckpointManager(str(tmp_path / "ckpt"), keep=3))
+    assert rf.run(stop_after_column=2) is False         # killed
+    del rf, store
+    rf2 = _resume(tmp_path, sched)
+    assert rf2.run() is True
+    assert np.array_equal(rf2.result_tiles(), ref)
+
+
+def test_mid_column_kill_exercises_journal_rollback(tmp_path):
+    """A kill between checkpoints leaves the disk store mutated by
+    post-checkpoint SPILLs; the undo journal must roll them back before
+    the replay re-executes (tile updates are not idempotent)."""
+    _, sched, store, ref = _setup(tmp_path)
+    rf = RestartableFactorization(
+        sched, store, CheckpointManager(str(tmp_path / "ckpt"), keep=3))
+    stop = int(0.9 * len(sched.ops))        # deep mid-stream, mid-column
+    assert rf.run(stop_after_ops=stop) is False
+    del rf, store
+    rf2 = _resume(tmp_path, sched)
+    assert rf2.run() is True
+    assert np.array_equal(rf2.result_tiles(), ref)
+
+
+def test_double_kill_resumes_bit_identical(tmp_path):
+    _, sched, store, ref = _setup(tmp_path)
+    rf = RestartableFactorization(
+        sched, store, CheckpointManager(str(tmp_path / "ckpt"), keep=3))
+    assert rf.run(stop_after_ops=len(sched.ops) // 2) is False
+    del rf, store
+    rf2 = _resume(tmp_path, sched)
+    assert rf2.run(stop_after_ops=20) is False          # killed again
+    del rf2
+    rf3 = _resume(tmp_path, sched)
+    assert rf3.run() is True
+    assert np.array_equal(rf3.result_tiles(), ref)
+
+
+def test_resume_under_different_schedule_refused(tmp_path):
+    _, sched, store, _ = _setup(tmp_path, host_slots=4)
+    rf = RestartableFactorization(
+        sched, store, CheckpointManager(str(tmp_path / "ckpt"), keep=3))
+    assert rf.run(stop_after_column=1) is False
+    other = build_schedule(_N // _TB, _TB, "v3", host_slots=5)
+    store2 = DiskTileStore.open(str(tmp_path / "store.npy"))
+    rf2 = RestartableFactorization(
+        other, store2, CheckpointManager(str(tmp_path / "ckpt"), keep=3))
+    with pytest.raises(ValueError, match="digest"):
+        rf2.run()
+
+
+def test_restartable_requires_spill_schedule(tmp_path):
+    sched = build_schedule(4, 8, "v3")      # host_slots=0
+    store = DiskTileStore.create(str(tmp_path / "t.npy"), nt=4, tb=8)
+    with pytest.raises(ValueError, match="host_slots"):
+        RestartableFactorization(
+            sched, store, CheckpointManager(str(tmp_path / "c"), keep=1))
+    spilled = build_schedule(4, 8, "v3", host_slots=2)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        RestartableFactorization(
+            spilled, store, CheckpointManager(str(tmp_path / "c"), keep=1),
+            checkpoint_every=0)

@@ -157,6 +157,23 @@ def test_solve_functions_on_raw_tile_store():
     assert np.isfinite(logdet_tiles(tiles))
 
 
+def test_logdet_names_offending_tile_on_invalid_factor():
+    """A non-positive diagonal entry (a factorization that lost positive
+    definiteness, e.g. under an over-aggressive precision ladder) used to
+    surface as a bare numpy log warning and a silent nan; it must raise
+    and say exactly which tile is broken."""
+    n, tb = 64, 16
+    tiles = to_tiles(np.linalg.cholesky(random_spd(n, seed=8)), tb)
+    tiles[1, 1, 2, 2] = 0.0
+    tiles[1, 1, 3, 3] = -4.0
+    with pytest.raises(ValueError) as exc:
+        logdet_tiles(tiles)
+    msg = str(exc.value)
+    assert "diagonal tile (1, 1)" in msg
+    assert "[2, 3]" in msg                 # the offending local indices
+    assert "positive definiteness" in msg
+
+
 # ---------------------------------------------------------------------------
 # Stacked multi-RHS (0.7): the serve batcher's substrate
 

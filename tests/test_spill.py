@@ -1,0 +1,306 @@
+"""Disk spill tier: FETCH/SPILL schedules, stores, executors, tuner axis.
+
+The load-bearing claims:
+
+* the spill post-pass is *pure bookkeeping* — a spill schedule replayed
+  through the bounded host tier produces a factor **bit-identical** to
+  the host-resident replay, for every policy and for multi-device
+  streams;
+* a matrix larger than the host-slab budget factors end-to-end against
+  an on-disk :class:`repro.DiskTileStore`, matching dense LAPACK to
+  fp64 round-off;
+* the scheduled FETCH/SPILL byte volumes crosscheck against the
+  simulator's disk lane *and* against the executed byte counters
+  (the ISSUE's acceptance criterion);
+* the tuner only engages the disk tier when the full tile store
+  overflows the model's host memory, and honours a pinned budget.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import repro
+from repro import CholeskyConfig, DiskTileStore, HW
+from repro.core.analytics import simulate, simulate_multi
+from repro.core.cholesky import (SpillJaxExecutor, run_multidevice_numpy,
+                                 run_schedule_numpy, run_schedule_spill)
+from repro.core.schedule import (OpKind, build_multidevice_schedule,
+                                 build_schedule)
+from repro.core.spill import (ArrayTileStore, SpilledHostStore,
+                              host_residency_at)
+from repro.core.tiling import random_spd, to_tiles
+
+_NT, _TB = 6, 16
+_N = _NT * _TB
+
+
+def _tiles(n=_N, seed=3):
+    return to_tiles(random_spd(n, seed=seed), _TB)
+
+
+# ---------------------------------------------------------------------------
+# The post-pass is pure bookkeeping: spill replay == plain replay, bitwise
+
+@pytest.mark.parametrize("policy", ["sync", "async", "v1", "v2", "v3", "v4"])
+def test_spill_replay_bitwise_equals_plain(policy):
+    tiles = _tiles()
+    plain = run_schedule_numpy(tiles, build_schedule(_NT, _TB, policy))
+    sp = run_schedule_numpy(tiles, build_schedule(_NT, _TB, policy,
+                                                  host_slots=4))
+    assert np.array_equal(plain, sp)
+
+
+@pytest.mark.parametrize("ndev,grid", [(2, None), (4, (2, 2))])
+def test_multidevice_spill_bitwise_equals_plain(ndev, grid):
+    tiles = _tiles()
+    plain = run_multidevice_numpy(
+        tiles, build_multidevice_schedule(_NT, _TB, ndev, "v3", grid=grid))
+    sp = run_multidevice_numpy(
+        tiles, build_multidevice_schedule(_NT, _TB, ndev, "v3", grid=grid,
+                                          host_slots=5))
+    assert np.array_equal(plain, sp)
+
+
+# ---------------------------------------------------------------------------
+# DiskTileStore
+
+def test_disk_store_roundtrip(tmp_path):
+    tiles = _tiles()
+    store = DiskTileStore.from_tiles(str(tmp_path / "t.npy"), tiles)
+    store.flush()
+    del store
+    back = DiskTileStore.open(str(tmp_path / "t.npy"))
+    assert back.nt == _NT and back.tb == _TB
+    assert np.array_equal(back.to_tiles(), tiles)
+    back.write_tile(1, 2, np.full((_TB, _TB), 5.0))
+    assert np.array_equal(back.read_tile(1, 2), np.full((_TB, _TB), 5.0))
+
+
+def test_disk_store_open_errors(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        DiskTileStore.open(str(tmp_path / "missing.npy"))
+    store = DiskTileStore.create(str(tmp_path / "t.npy"), nt=3, tb=8)
+    meta = json.loads((tmp_path / "t.npy.meta.json").read_text())
+    assert (meta["nt"], meta["tb"]) == (3, 8)
+    store.flush()
+    np.save(str(tmp_path / "bad.npy"), np.zeros((4, 4)))   # not a tile store
+    with pytest.raises(ValueError, match="tile store"):
+        DiskTileStore.open(str(tmp_path / "bad.npy"))
+
+
+# ---------------------------------------------------------------------------
+# Over-budget end-to-end: the win condition
+
+def test_over_budget_factorization_through_disk(tmp_path):
+    """144 tiles, an 8-slab host cache: the full store never fits in the
+    host tier, yet the factor matches dense LAPACK to fp64 round-off and
+    the executed disk traffic equals the scheduled byte volumes."""
+    n, tb, host_slots = 192, 16, 8
+    nt = n // tb
+    a = random_spd(n, seed=11)
+    sched = build_schedule(nt, tb, "v3", host_slots=host_slots)
+    assert nt * nt > host_slots            # genuinely over budget
+    store = DiskTileStore.from_matrix(str(tmp_path / "a.npy"), a, tb)
+    host = run_schedule_spill(store, sched)
+    got = np.tril(DiskTileStore.open(str(tmp_path / "a.npy")).to_array())
+    ref = np.linalg.cholesky(a)
+    assert np.allclose(got, ref, rtol=0, atol=1e-10 * np.abs(ref).max())
+    # executed counters == scheduled volumes == what the simulator bills
+    assert host.fetched_bytes == sched.fetch_bytes()
+    assert host.spilled_bytes == sched.spill_bytes()
+    assert host.fetched_bytes > 0 and host.spilled_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# SpilledHostStore contracts + static residency reconstruction
+
+def test_host_store_errors(tmp_path):
+    disk = DiskTileStore.create(str(tmp_path / "t.npy"), nt=2, tb=4)
+    with pytest.raises(ValueError, match="host_slots"):
+        SpilledHostStore(disk, 0)
+    host = SpilledHostStore(disk, 2)
+    with pytest.raises(KeyError, match=r"tile \(1, 1\) is not host-resident"):
+        host[1, 1]
+
+
+def test_residency_reconstruction_matches_replay():
+    sched = build_schedule(_NT, _TB, "v3", host_slots=4)
+    host = run_schedule_spill(ArrayTileStore(_tiles()), sched)
+    assert host_residency_at(sched.ops, len(sched.ops)) == host.where
+    # a strict prefix reconstructs too (the restart path's actual use)
+    mid = len(sched.ops) // 2
+    res = host_residency_at(sched.ops, mid)
+    assert all(0 <= s < 4 for s in res.values())
+    assert len(set(res.values())) == len(res)      # slabs are distinct
+
+
+def test_digest_folds_host_slots():
+    base = build_schedule(_NT, _TB, "v3")
+    s4 = build_schedule(_NT, _TB, "v3", host_slots=4)
+    s5 = build_schedule(_NT, _TB, "v3", host_slots=5)
+    assert base.digest() == build_schedule(_NT, _TB, "v3").digest()
+    assert len({base.digest(), s4.digest(), s5.digest()}) == 3
+    m0 = build_multidevice_schedule(_NT, _TB, 2, "v3")
+    m4 = build_multidevice_schedule(_NT, _TB, 2, "v3", host_slots=4)
+    assert m0.digest() != m4.digest()
+
+
+def test_builder_rejects_spill_with_lookahead():
+    with pytest.raises(ValueError, match="lookahead"):
+        build_multidevice_schedule(_NT, _TB, 2, "v3", lookahead=1,
+                                   host_slots=4)
+
+
+# ---------------------------------------------------------------------------
+# Simulator disk lane: the scheduled-vs-simulated crosscheck
+
+def test_simulator_disk_lane_crosschecks_schedule():
+    hw = HW["gh200"]
+    plain = build_schedule(_NT, _TB, "v3")
+    sp = build_schedule(_NT, _TB, "v3", host_slots=4)
+    r0, r1 = simulate(plain, hw), simulate(sp, hw)
+    assert (r0.fetch_bytes, r0.spill_bytes, r0.disk_busy) == (0, 0, 0.0)
+    assert r1.fetch_bytes == sp.fetch_bytes() > 0
+    assert r1.spill_bytes == sp.spill_bytes() > 0
+    assert r1.disk_busy > 0
+    assert r1.makespan >= r0.makespan      # the tier is never free
+
+
+@pytest.mark.parametrize("ndev,grid", [(2, None), (4, (2, 2))])
+def test_simulator_disk_lane_multi(ndev, grid):
+    hw = HW["gh200"]
+    msched = build_multidevice_schedule(_NT, _TB, ndev, "v3", grid=grid,
+                                        host_slots=5)
+    r = simulate_multi(msched, hw)
+    assert r.fetch_bytes == msched.fetch_bytes() > 0
+    assert r.spill_bytes == msched.spill_bytes() > 0
+    assert r.disk_busy > 0
+
+
+def test_volume_report_gains_disk_lane():
+    sp = build_schedule(_NT, _TB, "v3", host_slots=4)
+    rep = repro.volume_report(sp)
+    assert rep["host_slots"] == 4
+    assert rep["fetch_bytes"] == sp.fetch_bytes()
+    assert rep["spill_bytes"] == sp.spill_bytes()
+    assert rep["host_bytes"] == 8 * 4 * _TB * _TB
+    assert "host_slots" not in repro.volume_report(
+        build_schedule(_NT, _TB, "v3"))
+
+
+# ---------------------------------------------------------------------------
+# JAX executor over the disk tier
+
+def test_spill_jax_executor_matches_numpy(tmp_path):
+    tiles = _tiles()
+    sched = build_schedule(_NT, _TB, "v3", host_slots=4)
+    ref = run_schedule_numpy(tiles, sched)
+    ex = SpillJaxExecutor(sched)
+    out = ex(tiles)
+    assert np.allclose(out, ref, rtol=0, atol=1e-12)
+    traces = ex.jit_traces
+    assert traces > 0
+    out2 = ex(_tiles(seed=9))
+    assert ex.jit_traces == traces         # segments retrace nothing
+    assert np.allclose(out2, run_schedule_numpy(_tiles(seed=9), sched),
+                       rtol=0, atol=1e-12)
+    # and straight off a disk store, in place
+    store = DiskTileStore.from_tiles(str(tmp_path / "t.npy"), tiles)
+    ex.run_store(store)
+    assert np.allclose(store.to_tiles(), ref, rtol=0, atol=1e-12)
+
+
+def test_make_jax_executor_rejects_spill_schedules():
+    from repro.core.cholesky import make_jax_executor
+    with pytest.raises(ValueError, match="spill"):
+        make_jax_executor(build_schedule(_NT, _TB, "v3", host_slots=4))
+
+
+# ---------------------------------------------------------------------------
+# Planner API integration
+
+def test_plan_factor_through_spill_numpy():
+    a = random_spd(_N, seed=5)
+    solver = repro.plan(_N, CholeskyConfig(tb=_TB, policy="v3", host_slots=4,
+                                           backend="numpy")).compile()
+    l = solver.factor(a)
+    assert np.allclose(np.tril(l), np.linalg.cholesky(a), atol=1e-10)
+    v = solver.volume()
+    assert v["fetch_bytes"] > 0 and v["spill_bytes"] > 0
+    r = solver.simulate(HW["gh200"])
+    assert r.fetch_bytes == v["fetch_bytes"]
+
+
+def test_plan_factor_through_spill_jax():
+    a = random_spd(_N, seed=5)
+    solver = repro.plan(_N, CholeskyConfig(tb=_TB, policy="v3", host_slots=4,
+                                           backend="jax")).compile()
+    l = solver.factor(a)
+    assert np.allclose(np.tril(l), np.linalg.cholesky(a), atol=1e-10)
+    assert solver.stats["jit_traces"] > 0
+
+
+def test_config_validation_and_backend_resolution():
+    with pytest.raises(ValueError, match="host_slots must be >= 0"):
+        CholeskyConfig(tb=_TB, host_slots=-1)
+    with pytest.raises(ValueError, match="lookahead"):
+        CholeskyConfig(tb=_TB, ndev=2, host_slots=4, lookahead=1)
+    with pytest.raises(ValueError, match="NumPy replay"):
+        CholeskyConfig(tb=_TB, ndev=2, host_slots=4, backend="jax")
+    auto = CholeskyConfig(tb=_TB, ndev=2, host_slots=4)
+    assert auto.resolved_backend() == "numpy"
+    assert CholeskyConfig(tb=_TB, host_slots=4).resolved_backend() == "jax"
+
+
+def test_multidevice_plan_spill_factor():
+    a = random_spd(_N, seed=6)
+    solver = repro.plan(_N, CholeskyConfig(tb=_TB, policy="v3", ndev=2,
+                                           host_slots=5)).compile()
+    l = solver.factor(a)
+    assert np.allclose(np.tril(l), np.linalg.cholesky(a), atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# Tuner: the host_slots axis
+
+def test_host_slot_candidates_engage_only_when_over_budget():
+    from repro.tune.search import host_slot_candidates
+    roomy = HW["gh200"]
+    assert host_slot_candidates(_NT, _TB, roomy) == [0]
+    tight = dataclasses.replace(roomy, host_mem_bytes=40_000.0)
+    cands = host_slot_candidates(_NT, _TB, tight)
+    assert cands and all(c > 0 for c in cands)
+    assert max(cands) <= tight.max_host_slots(_TB)
+
+
+def test_search_engages_spill_under_tight_host_memory():
+    from repro.tune.search import is_feasible, search
+    tight = dataclasses.replace(HW["gh200"], host_mem_bytes=40_000.0)
+    base = CholeskyConfig(tb=_TB, policy="v3")
+    assert not is_feasible(_N, base, tight)        # store overflows host
+    result = search(_N, tight, base)
+    win = result.config
+    assert win.host_slots > 0
+    assert is_feasible(_N, win, tight)
+    assert result.best.fetch_bytes > 0
+
+
+def test_search_honours_pinned_host_slots():
+    from repro.tune.search import search
+    result = search(_N, HW["gh200"],
+                    CholeskyConfig(tb=_TB, policy="v3", host_slots=12))
+    assert result.config.host_slots == 12
+    # and an unconstrained search on a roomy model stays host-resident
+    open_r = search(_N, HW["gh200"], CholeskyConfig(tb=_TB, policy="v3"))
+    assert open_r.config.host_slots == 0
+
+
+def test_hostio_ops_do_not_inflate_device_slots():
+    plain = build_schedule(_NT, _TB, "v3")
+    sp = build_schedule(_NT, _TB, "v3", host_slots=4)
+    dev_ops = [op for op in sp.ops
+               if op.kind not in (OpKind.FETCH, OpKind.SPILL)]
+    assert [(o.kind, o.i, o.j, o.k) for o in dev_ops] == \
+        [(o.kind, o.i, o.j, o.k) for o in plain.ops]
