@@ -88,5 +88,47 @@ def run(out):
     data["pipeline"] = {"makespan_s": r.makespan, "lookahead": 2,
                         "grid": [2, 2], "ahead_spans": ahead,
                         "trail_spans": len(pipe) - ahead}
+
+    # measured counterpart (PR 9, repro.obs): trace a real factorization
+    # on the live backend, export it in the same lane vocabulary, and
+    # close the model-vs-measured loop — drift report against the
+    # datasheet model, then a trace-refined model that must predict the
+    # same trace strictly better
+    from repro.obs import TraceRecorder, chrome_trace_measured, drift_report
+    from repro.tune import refine_from_trace
+    nm, tbm = 576, 96
+    rng = np.random.default_rng(7)
+    am = rng.standard_normal((nm, nm))
+    am = am @ am.T + nm * np.eye(nm)
+    plm = repro.plan(nm, tb=tbm, policy="v3")
+    rec = TraceRecorder()
+    plm.compile().factor(am, trace=rec)
+    nops = len(plm.single_schedule().ops)
+    assert len(rec.spans) == nops, (len(rec.spans), nops)
+    mpath = OUT_DIR / "fig13_measured.trace.json"
+    chrome_trace_measured(rec, mpath)
+    out(f"   measured chrome trace -> {mpath}")
+    rep = drift_report(rec, plm.simulate(hw, record_timeline=True))
+    refined = refine_from_trace(rec, base=hw)
+    rep_ref = drift_report(rec, plm.simulate(refined, record_timeline=True))
+    assert rep_ref.total_abs_error < rep.total_abs_error
+    out(f"[measured] {nm}x{nm} tb={tbm} on the live backend: "
+        f"{len(rec.spans)} spans == {nops} ops, "
+        f"makespan {rec.makespan_s()*1e3:.0f} ms; drift vs {hw.name} "
+        f"x{rep.makespan_ratio:.1f}, refined abs error "
+        f"{rep_ref.total_abs_error:.3f}s < {rep.total_abs_error:.3f}s; "
+        f"predicted overlap eff {rep.predicted_overlap_efficiency}")
+    data["measured"] = {
+        "n": nm, "tb": tbm,
+        "spans": len(rec.spans), "ops": nops,
+        "makespan_s": rec.makespan_s(),
+        "makespan_ratio_vs_model": rep.makespan_ratio,
+        "total_abs_error_s": rep.total_abs_error,
+        "refined_total_abs_error_s": rep_ref.total_abs_error,
+        "predicted_overlap_efficiency": rep.predicted_overlap_efficiency,
+        # per-op fencing serializes copy and compute, so measured
+        # overlap is ~0 by construction (docs/observability.md)
+        "measured_overlap_efficiency": rep.measured_overlap_efficiency,
+    }
     out("")
     return data

@@ -53,6 +53,16 @@ than host memory factor end-to-end.  The repaired
 the schedule digest; :class:`RestartableFactorization` resumes a killed
 run — mid-column included, via a tile undo journal — to a bit-identical
 factor (docs/spill.md).
+
+Observability (0.9): :mod:`repro.obs` measures what the simulator
+predicts — ``factor(a, trace=TraceRecorder())`` records one fenced span
+per executed op on every executor, exports it in the simulator's
+chrome://tracing lane vocabulary, and ``drift_report`` aligns it op-by-op
+against ``simulate``/``simulate_multi``;
+``tune.calibrate(refine_from=trace)`` refits the hardware model from the
+measured spans.  The process-wide metrics registry
+(``repro.obs.snapshot()``) absorbs plan-cache, solver, and serve
+counters (docs/observability.md).
 """
 from repro.core.analytics import (HW, HardwareModel, ascii_trace,
                                   chrome_trace, crosscheck_executed_volume,
@@ -74,10 +84,11 @@ from repro.core.schedule import (MultiDeviceSchedule, Op, OpKind, Schedule,
                                  build_multidevice_schedule, build_schedule)
 from repro.core.taskgraph import build_task_dag, verify_dispatch
 from repro.core.tiling import TileLayout, from_tiles, random_spd, to_tiles
-from repro import serve, tune
+from repro import obs, serve, tune
+from repro.obs import NullRecorder, TraceRecorder, drift_report
 from repro.serve import SolverService
 
-__version__ = "0.8.0"
+__version__ = "0.9.0"
 
 __all__ = [
     "__version__",
@@ -106,6 +117,8 @@ __all__ = [
     "tune",
     # serving
     "serve", "SolverService",
+    # observability
+    "obs", "TraceRecorder", "NullRecorder", "drift_report",
     # tiling
     "TileLayout", "to_tiles", "from_tiles", "random_spd",
 ]

@@ -52,9 +52,21 @@ from typing import Any, Optional
 import numpy as np
 
 from .precision import LADDERS, PrecisionPlan, uniform_plan
-from .schedule import (MultiDeviceSchedule, build_multidevice_schedule,
-                       build_schedule, min_cache_slots)
+from .schedule import (MultiDeviceSchedule, OpKind,
+                       build_multidevice_schedule, build_schedule,
+                       min_cache_slots)
 from .tiling import TileLayout, from_tiles, to_tiles
+
+
+def _obs_registry():
+    """The process-wide obs metrics registry, imported lazily so the
+    core planner stays importable without the obs package (and so the
+    repro package __init__ never cycles through obs at import time)."""
+    try:
+        from repro.obs.metrics import REGISTRY
+        return REGISTRY
+    except Exception:
+        return None
 
 _POLICIES = ("sync", "async", "v1", "v2", "v3", "v4", "auto")
 _MULTIDEV_POLICIES = ("sync", "v1", "v2", "v3")
@@ -326,20 +338,49 @@ class OOCSolver:
     observe (or silently consume) each other's factors.
     """
 
-    def __init__(self, plan: "CholeskyPlan", executor: "_CompiledExecutor"):
+    def __init__(self, plan: "CholeskyPlan", executor: "_CompiledExecutor",
+                 default_trace=None):
         self._plan = plan
         self._executor = executor
         self._tiles = None          # this solver's factored tile store (f64)
         self._factor_calls = 0
         self._solve_calls = 0
+        self._default_trace = default_trace   # from compile(trace=...)
+        self._last_io = None        # executed FETCH/SPILL counters
 
     @property
     def stats(self) -> dict:
         """``jit_traces`` is plan-wide (the amortization contract);
-        ``factor_calls``/``solve_calls`` count this solver's own use."""
+        ``factor_calls``/``solve_calls`` count this solver's own use.
+
+        ``transfers`` is the *unified* movement view across all three
+        executor classes: the schedule's static LOAD/STORE volumes
+        (which, by the static-schedule claim, are also the executed
+        volumes), overlaid — when the last ``factor()`` ran an executor
+        that counts at run time — with executed BCAST/RECV counters
+        (multi-device jax) and executed FETCH/SPILL counters (spill
+        executors and replays)."""
+        sched = self._plan.schedule
+        transfers = {
+            "loads": sched.count(OpKind.LOAD),
+            "stores": sched.count(OpKind.STORE),
+            "h2d_bytes": sched.loads_bytes(),
+            "d2h_bytes": sched.stores_bytes(),
+        }
+        if self._plan.config.ndev > 1:
+            transfers["bcast_bytes"] = sched.bcast_bytes()
+            executed = self.transfer_stats()
+            if executed is not None:
+                transfers.update(executed)
+        if sched.host_slots:
+            transfers["scheduled_fetch_bytes"] = sched.fetch_bytes()
+            transfers["scheduled_spill_bytes"] = sched.spill_bytes()
+            if self._last_io is not None:
+                transfers.update(self._last_io)
         return {"jit_traces": self._executor.jit_traces,
                 "factor_calls": self._factor_calls,
-                "solve_calls": self._solve_calls}
+                "solve_calls": self._solve_calls,
+                "transfers": transfers}
 
     # -- two-phase surface -------------------------------------------------
     @property
@@ -362,8 +403,8 @@ class OOCSolver:
         return self._plan.volume()
 
     # -- execution ---------------------------------------------------------
-    def factor(self, a: np.ndarray,
-               materialize: bool = True) -> np.ndarray | None:
+    def factor(self, a: np.ndarray, materialize: bool = True,
+               trace=None) -> np.ndarray | None:
         """Factor SPD ``a`` through the cached schedule; returns tril L.
 
         ``materialize=False`` skips assembling the dense n x n factor and
@@ -371,6 +412,15 @@ class OOCSolver:
         ``solve()``/``solve_lower()``/``logdet()`` consume it.  That is
         the out-of-core mode: at OOC scale the dense L is exactly the
         object that does not fit.
+
+        ``trace``: an *active* :class:`repro.obs.TraceRecorder` switches
+        every backend to its measured path — eager op-by-op execution
+        with a ``block_until_ready`` fence per op, recording exactly one
+        span per schedule op (see docs/observability.md; analyze with
+        :func:`repro.obs.drift_report`).  ``None`` (or the inactive
+        :data:`repro.obs.NULL`) runs the ordinary jitted path unchanged —
+        bit-identical results, no extra jit traces.  A default recorder
+        can be pinned at :meth:`CholeskyPlan.compile`.
 
         A solver holds exactly **one** factor: each ``factor()`` call
         *overwrites* the previous tile store, so pending ``solve()``
@@ -386,19 +436,70 @@ class OOCSolver:
                 f"n={self.n}; build a new plan for a different size")
         tiles = to_tiles(a, self._plan.config.tb)
         cfg = self._plan.config
+        if trace is None:
+            trace = self._default_trace
+        active = trace is not None and getattr(trace, "active", False)
+        if active:
+            trace.meta.update({
+                "n": self.n, "tb": cfg.tb, "nt": self.schedule.nt,
+                "ndev": cfg.ndev, "policy": self.schedule.policy,
+                "lookahead": cfg.lookahead or 0,
+                "host_slots": cfg.host_slots,
+                "grid": list(self.schedule.grid),
+                "backend": cfg.resolved_backend(),
+            })
         if self._executor.multidevice is not None:
             # per-device jitted streams + device-to-device panel broadcast
-            out = self._executor.fn(tiles)
+            # (or, traced, the executor's fenced op-by-op measured path)
+            out = self._executor.fn(tiles, trace=trace)
         elif cfg.ndev > 1:
-            from .cholesky import run_multidevice_numpy
-            out = run_multidevice_numpy(tiles, self._plan.schedule)
+            if cfg.host_slots > 0:
+                from .cholesky import run_multidevice_spill
+                from .spill import ArrayTileStore
+                store = ArrayTileStore(tiles)
+                hosts = run_multidevice_spill(store, self._plan.schedule,
+                                              trace=trace)
+                out = store.to_tiles()
+                self._last_io = {
+                    "fetch_ops": sum(h.fetch_ops for h in hosts),
+                    "spill_ops": sum(h.spill_ops for h in hosts),
+                    "fetched_bytes": sum(h.fetched_bytes for h in hosts),
+                    "spilled_bytes": sum(h.spilled_bytes for h in hosts),
+                }
+            else:
+                from .cholesky import run_multidevice_numpy
+                out = run_multidevice_numpy(tiles, self._plan.schedule,
+                                            trace=trace)
         elif cfg.resolved_backend() == "numpy":
-            from .cholesky import run_schedule_numpy
-            out = run_schedule_numpy(tiles, self._plan.single_schedule())
+            if cfg.host_slots > 0:
+                from .cholesky import run_schedule_spill
+                from .spill import ArrayTileStore
+                store = ArrayTileStore(tiles)
+                h = run_schedule_spill(store, self._plan.single_schedule(),
+                                       trace=trace)
+                out = store.to_tiles()
+                self._last_io = {
+                    "fetch_ops": h.fetch_ops, "spill_ops": h.spill_ops,
+                    "fetched_bytes": h.fetched_bytes,
+                    "spilled_bytes": h.spilled_bytes,
+                }
+            else:
+                from .cholesky import run_schedule_numpy
+                out = run_schedule_numpy(tiles, self._plan.single_schedule(),
+                                         trace=trace)
         elif self._executor.spill is not None:
             # segmented spill executor: host tiles stay numpy (the
             # bounded slab buffer is the only jax-resident host state)
-            out = np.asarray(self._executor.fn(tiles), dtype=np.float64)
+            out = np.asarray(self._executor.fn(tiles, trace=trace),
+                             dtype=np.float64)
+            self._last_io = self._executor.spill.last_io_stats
+        elif active:
+            # per-op spans are unobservable inside the single unrolled
+            # jit: traced runs execute the same op semantics eagerly
+            from .cholesky import run_traced_jax
+            out = run_traced_jax(self._plan.single_schedule(), tiles, trace,
+                                 compute_dtype=self._executor.dtype,
+                                 use_pallas=cfg.use_pallas)
         else:
             import jax.numpy as jnp
             ex = self._executor
@@ -406,6 +507,17 @@ class OOCSolver:
                              dtype=np.float64)
         self._tiles = out
         self._factor_calls += 1
+        reg = _obs_registry()
+        if reg is not None:
+            sched = self._plan.schedule
+            reg.inc("repro.factor.calls")
+            reg.inc("repro.factor.h2d_bytes", sched.loads_bytes())
+            reg.inc("repro.factor.d2h_bytes", sched.stores_bytes())
+            if sched.host_slots:
+                reg.inc("repro.factor.fetch_bytes", sched.fetch_bytes())
+                reg.inc("repro.factor.spill_bytes", sched.spill_bytes())
+            reg.set_gauge("repro.factor.jit_traces",
+                          self._executor.jit_traces)
         if not materialize:
             return None
         return np.tril(from_tiles(out))
@@ -448,6 +560,9 @@ class OOCSolver:
         from .solve import cho_solve_tiles
         x = cho_solve_tiles(self._factored_tiles(), self._check_rhs(b))
         self._solve_calls += 1
+        reg = _obs_registry()
+        if reg is not None:
+            reg.inc("repro.solve.calls")
         return x
 
     def solve_lower(self, b: np.ndarray) -> np.ndarray:
@@ -457,6 +572,9 @@ class OOCSolver:
         from .solve import solve_lower_tiles
         z = solve_lower_tiles(self._factored_tiles(), self._check_rhs(b))
         self._solve_calls += 1
+        reg = _obs_registry()
+        if reg is not None:
+            reg.inc("repro.solve.calls")
         return z
 
     def logdet(self) -> float:
@@ -561,7 +679,7 @@ class CholeskyPlan:
             self._single = self.schedule.to_single()
         return self._single
 
-    def compile(self) -> OOCSolver:
+    def compile(self, trace=None) -> OOCSolver:
         """Return a fresh solver over this plan's one compiled executor.
 
         The executor (jit) is built on first call and reused afterwards
@@ -570,12 +688,16 @@ class CholeskyPlan:
         state stays with the call site that produced it (and is freed
         with it — the plan cache never pins a factored matrix).  The
         per-plan lock makes concurrent first compiles (serve workers
-        racing for a shared plan) build exactly one executor."""
+        racing for a shared plan) build exactly one executor.
+
+        ``trace``: a :class:`repro.obs.TraceRecorder` pinned as the
+        solver's default — every ``factor()`` without an explicit
+        ``trace=`` records into it (a per-call ``trace=`` overrides)."""
         with self._compile_lock:
             if (self._executor is None
                     or self._executor.dtype != _resolved_dtype(self.config)):
                 self._executor = _CompiledExecutor(self)
-            return OOCSolver(self, self._executor)
+            return OOCSolver(self, self._executor, default_trace=trace)
 
     def simulate(self, hw, link_bw=None, record_timeline: bool = False):
         """Three-engine event model (per-device + shared link for ndev>1)."""

@@ -129,7 +129,8 @@ def _device_nslots(ops) -> int:
                 for o in ops if o.kind not in HOST_IO), default=-1) + 1
 
 
-def run_schedule_numpy(host_tiles: np.ndarray, sched: Schedule) -> np.ndarray:
+def run_schedule_numpy(host_tiles: np.ndarray, sched: Schedule,
+                       trace=None) -> np.ndarray:
     """Interpret the op stream with NumPy.  Returns the factored tile store.
 
     A spill schedule (``host_slots > 0``) is replayed through a bounded
@@ -137,23 +138,35 @@ def run_schedule_numpy(host_tiles: np.ndarray, sched: Schedule) -> np.ndarray:
     interface — convenient for equivalence tests; use
     :func:`run_schedule_spill` to drive a real on-disk
     :class:`~repro.core.spill.DiskTileStore`.
+
+    ``trace``: an active :class:`repro.obs.trace.TraceRecorder` records
+    one measured span per op (NumPy is synchronous, so no fencing is
+    needed); ``None`` or an inactive recorder leaves the replay loop
+    untouched.
     """
     if sched.host_slots > 0:
         from .spill import ArrayTileStore
         store = ArrayTileStore(host_tiles)
-        run_schedule_spill(store, sched)
+        run_schedule_spill(store, sched, trace=trace)
         return store.to_tiles()
     host = host_tiles.astype(np.float64).copy()
     tb = sched.tb
     nslots = _device_nslots(sched.ops)
     slots = np.zeros((nslots, tb, tb), dtype=np.float64)
     lad = sched.plan.ladder
+    if trace is not None and getattr(trace, "active", False):
+        for idx, op in enumerate(sched.ops):
+            t0 = trace.now()
+            _np_interpret_op(host, slots, op, lad)
+            trace.record(idx, op.kind.value, 0, t0, trace.now(), op.bytes,
+                         lad[op.cls], op.i, op.j)
+        return host
     for op in sched.ops:
         _np_interpret_op(host, slots, op, lad)
     return host
 
 
-def run_schedule_spill(store, sched: Schedule):
+def run_schedule_spill(store, sched: Schedule, trace=None):
     """Replay a spill schedule against a disk-backed tile store in place.
 
     ``store`` is a :class:`~repro.core.spill.DiskTileStore` (or anything
@@ -161,7 +174,8 @@ def run_schedule_spill(store, sched: Schedule):
     holds the factored tiles.  Host memory use is bounded: one
     ``[host_slots, tb, tb]`` slab cache plus the device slot buffer.
     Returns the :class:`~repro.core.spill.SpilledHostStore` (its
-    fetched/spilled byte counters crosscheck the schedule).
+    fetched/spilled byte counters crosscheck the schedule).  An active
+    ``trace`` recorder gets one measured span per op, disk I/O included.
     """
     from .spill import SpilledHostStore
     if sched.host_slots < 1:
@@ -171,38 +185,55 @@ def run_schedule_spill(store, sched: Schedule):
     slots = np.zeros((_device_nslots(sched.ops), sched.tb, sched.tb),
                      dtype=np.float64)
     lad = sched.plan.ladder
-    for op in sched.ops:
-        _np_interpret_op(host, slots, op, lad)
+    if trace is not None and getattr(trace, "active", False):
+        for idx, op in enumerate(sched.ops):
+            t0 = trace.now()
+            _np_interpret_op(host, slots, op, lad)
+            trace.record(idx, op.kind.value, 0, t0, trace.now(), op.bytes,
+                         lad[op.cls], op.i, op.j)
+    else:
+        for op in sched.ops:
+            _np_interpret_op(host, slots, op, lad)
     store.flush()
     return host
 
 
 def run_multidevice_numpy(host_tiles: np.ndarray,
-                          msched: MultiDeviceSchedule) -> np.ndarray:
+                          msched: MultiDeviceSchedule,
+                          trace=None) -> np.ndarray:
     """Interpret all per-device op streams against one host tile store.
 
     Each device gets its own slot buffer; the streams are replayed in
     :meth:`MultiDeviceSchedule.iter_dispatch_order` (column-major with
     the owner first for ``lookahead = 0``, the emitter's pipelined chunk
     order otherwise), so every RECV observes the sender's finalized
-    (host-coherent) tile.
+    (host-coherent) tile.  An active ``trace`` recorder gets one span per
+    op, tagged with its device stream and dispatch phase.
     """
     if msched.host_slots > 0:
         from .spill import ArrayTileStore
         store = ArrayTileStore(host_tiles)
-        run_multidevice_spill(store, msched)
+        run_multidevice_spill(store, msched, trace=trace)
         return store.to_tiles()
     host = host_tiles.astype(np.float64).copy()
     tb = msched.tb
     lad = msched.plan.ladder
     slots = [np.zeros((msched.stream_nslots(d), tb, tb), dtype=np.float64)
              for d in range(msched.ndev)]
+    if trace is not None and getattr(trace, "active", False):
+        for idx, (d, op, phase) in enumerate(
+                msched.iter_dispatch_order(with_phase=True)):
+            t0 = trace.now()
+            _np_interpret_op(host, slots[d], op, lad)
+            trace.record(idx, op.kind.value, d, t0, trace.now(), op.bytes,
+                         lad[op.cls], op.i, op.j, phase)
+        return host
     for d, op in msched.iter_column_order():
         _np_interpret_op(host, slots[d], op, lad)
     return host
 
 
-def run_multidevice_spill(store, msched: MultiDeviceSchedule):
+def run_multidevice_spill(store, msched: MultiDeviceSchedule, trace=None):
     """Replay a multi-device spill schedule against one shared tile store.
 
     Each device bounds its own host tier (one
@@ -227,7 +258,10 @@ def run_multidevice_spill(store, msched: MultiDeviceSchedule):
     slots = [np.zeros((msched.stream_nslots(d), tb, tb), dtype=np.float64)
              for d in range(msched.ndev)]
     wires: dict = {}
-    for d, op in msched.iter_dispatch_order():
+    recording = trace is not None and getattr(trace, "active", False)
+    for idx, (d, op, phase) in enumerate(
+            msched.iter_dispatch_order(with_phase=True)):
+        t0 = trace.now() if recording else 0
         if op.kind is OpKind.BCAST:
             wires[(op.i, op.j, op.k, op.src)] = np.array(hosts[d][op.i, op.j])
         elif op.kind is OpKind.RECV:
@@ -238,6 +272,9 @@ def run_multidevice_spill(store, msched: MultiDeviceSchedule):
                 hosts[d][op.i, op.j] = t
         else:
             _np_interpret_op(hosts[d], slots[d], op, lad)
+        if recording:
+            trace.record(idx, op.kind.value, d, t0, trace.now(), op.bytes,
+                         lad[op.cls], op.i, op.j, phase)
     store.flush()
     return hosts
 
@@ -334,6 +371,45 @@ def make_jax_executor(sched: Schedule, compute_dtype=jnp.float64,
     return run
 
 
+def run_traced_jax(sched: Schedule, host_tiles: np.ndarray, trace,
+                   compute_dtype=jnp.float64, use_pallas: bool = False,
+                   interpret: bool = True) -> np.ndarray:
+    """Single-device JAX execution in *measured* mode: op-by-op, eager,
+    with a ``jax.block_until_ready`` fence after every op so each
+    recorded span covers that op's actual execution (under async
+    dispatch an unfenced timestamp would measure queue insertion).
+
+    This is what ``OOCSolver.factor(a, trace=rec)`` runs on the jax
+    backend instead of the unrolled single-jit program — per-op spans
+    are unobservable from inside one jitted computation.  The numerical
+    semantics are identical (:func:`_jx_interpret_op` is the same
+    interpreter the jit unrolls); the fencing serializes the engines, so
+    a traced run is slower than an untraced one by construction.
+    Records exactly one span per schedule op (ALLOC/FREE included, as
+    zero-width bookkeeping spans) and returns the factored f64 tiles.
+    """
+    if sched.host_slots > 0:
+        raise ValueError("run_traced_jax runs host-resident schedules; "
+                         "spill schedules trace through SpillJaxExecutor")
+    tb = sched.tb
+    lad = sched.plan.ladder
+    kf = _make_kernel_fns(use_pallas, interpret)
+    host = jnp.asarray(np.asarray(host_tiles, dtype=np.float64),
+                       dtype=compute_dtype)
+    slots = jnp.zeros((max(_device_nslots(sched.ops), 1), tb, tb),
+                      dtype=compute_dtype)
+    jax.block_until_ready((host, slots))   # setup outside the first span
+    ident = lambda i: i  # noqa: E731
+    for idx, op in enumerate(sched.ops):
+        t0 = trace.now()
+        host, slots = _jx_interpret_op(host, slots, op, lad, kf,
+                                       compute_dtype, ident)
+        jax.block_until_ready((host, slots))
+        trace.record(idx, op.kind.value, 0, t0, trace.now(), op.bytes,
+                     lad[op.cls], op.i, op.j)
+    return np.asarray(host, dtype=np.float64)
+
+
 class SpillJaxExecutor:
     """JAX executor for single-device spill schedules (bounded host tier).
 
@@ -361,6 +437,7 @@ class SpillJaxExecutor:
         self.sched = sched
         self.compute_dtype = compute_dtype
         self.jit_traces = 0
+        self.last_io_stats = None     # executed FETCH/SPILL counters
         self._kf = _make_kernel_fns(use_pallas, interpret)
         self._nslots = _device_nslots(sched.ops)
         self._segments = self._build_segments()
@@ -439,35 +516,105 @@ class SpillJaxExecutor:
         close_run()
         return segments
 
-    def run_store(self, store) -> None:
-        """Factor the tile store in place (input tiles -> L tiles)."""
+    def run_store(self, store, trace=None) -> None:
+        """Factor the tile store in place (input tiles -> L tiles).
+
+        An active ``trace`` recorder switches to the measured path: the
+        full op stream is executed eagerly op-by-op with a
+        ``block_until_ready`` fence per op (one span per op, disk I/O
+        included) instead of the jitted segments.  Either way,
+        ``last_io_stats`` holds the executed FETCH/SPILL counters."""
+        if trace is not None and getattr(trace, "active", False):
+            return self._run_traced_store(store, trace)
         sched = self.sched
         tb, cdt = sched.tb, self.compute_dtype
         slabs = jnp.zeros((sched.host_slots, tb, tb), dtype=cdt)
         slots = jnp.zeros((max(self._nslots, 1), tb, tb), dtype=cdt)
+        io = {"fetch_ops": 0, "spill_ops": 0,
+              "fetched_bytes": 0, "spilled_bytes": 0}
         for kind, item in self._segments:
             if kind == "io":
                 op = item
                 if op.kind is OpKind.FETCH:
+                    io["fetch_ops"] += 1
+                    io["fetched_bytes"] += op.bytes
                     if op.bytes:
                         slabs = slabs.at[op.slot_c].set(
                             jnp.asarray(store.read_tile(op.i, op.j),
                                         dtype=cdt))
                 else:
+                    io["spill_ops"] += 1
+                    io["spilled_bytes"] += op.bytes
                     store.write_tile(
                         op.i, op.j,
                         np.asarray(slabs[op.slot_c], dtype=np.float64))
             else:
                 slabs, slots = item(slabs, slots)
         store.flush()
+        self.last_io_stats = io
 
-    def __call__(self, host_tiles: np.ndarray) -> np.ndarray:
+    def _run_traced_store(self, store, trace) -> None:
+        """Measured replay: the stream op-by-op, fenced, one span each.
+
+        Maintains the same tile->slab residency map the segment builder
+        bakes into its jitted programs (it changes only at FETCH), so
+        LOAD/STORE hit the same slabs and the numerics match the
+        segmented path op-for-op."""
+        sched = self.sched
+        tb, cdt = sched.tb, self.compute_dtype
+        lad = sched.plan.ladder
+        slabs = jnp.zeros((sched.host_slots, tb, tb), dtype=cdt)
+        slots = jnp.zeros((max(self._nslots, 1), tb, tb), dtype=cdt)
+        jax.block_until_ready((slabs, slots))
+        where: dict[tuple[int, int], int] = {}
+        io = {"fetch_ops": 0, "spill_ops": 0,
+              "fetched_bytes": 0, "spilled_bytes": 0}
+        for idx, op in enumerate(sched.ops):
+            t0 = trace.now()
+            if op.kind is OpKind.FETCH:
+                for t, s in list(where.items()):
+                    if s == op.slot_c:
+                        del where[t]
+                where[(op.i, op.j)] = op.slot_c
+                io["fetch_ops"] += 1
+                io["fetched_bytes"] += op.bytes
+                if op.bytes:
+                    slabs = slabs.at[op.slot_c].set(
+                        jnp.asarray(store.read_tile(op.i, op.j), dtype=cdt))
+                    jax.block_until_ready(slabs)
+            elif op.kind is OpKind.SPILL:
+                io["spill_ops"] += 1
+                io["spilled_bytes"] += op.bytes
+                store.write_tile(
+                    op.i, op.j,
+                    np.asarray(slabs[op.slot_c], dtype=np.float64))
+            elif op.kind is OpKind.LOAD:
+                t = _jx_round(slabs[where[(op.i, op.j)]], lad[op.cls], cdt)
+                slots = slots.at[op.slot_c].set(t)
+                jax.block_until_ready(slots)
+            elif op.kind is OpKind.STORE:
+                r = _jx_round(slots[op.slot_c], lad[op.cls], cdt)
+                slots = slots.at[op.slot_c].set(r)
+                slabs = slabs.at[where[(op.i, op.j)]].set(r)
+                jax.block_until_ready((slabs, slots))
+            elif op.kind is OpKind.ALLOC or op.kind is OpKind.FREE:
+                pass
+            else:
+                _, slots = _jx_interpret_op(None, slots, op, lad, self._kf,
+                                            cdt, None)
+                jax.block_until_ready(slots)
+            trace.record(idx, op.kind.value, 0, t0, trace.now(), op.bytes,
+                         lad[op.cls], op.i, op.j)
+        store.flush()
+        self.last_io_stats = io
+
+    def __call__(self, host_tiles: np.ndarray, trace=None) -> np.ndarray:
         """Array-in/array-out convenience: factor a full tile array
         through an in-memory backing store (tests, the solver path when
         the caller holds the matrix anyway)."""
         from .spill import ArrayTileStore
         store = ArrayTileStore(host_tiles)
-        self.run_store(store)
+        self.run_store(store, trace=trace)
         return store.to_tiles()
 
 
@@ -626,8 +773,15 @@ class MultiDeviceJaxExecutor:
                 for d, start, stop, _k, _phase in msched.dispatch_chunks()]
 
     # -- run time ----------------------------------------------------------
-    def __call__(self, host_tiles: np.ndarray) -> np.ndarray:
-        """Factor the [Nt, Nt, tb, tb] host store; returns it in f64."""
+    def __call__(self, host_tiles: np.ndarray, trace=None) -> np.ndarray:
+        """Factor the [Nt, Nt, tb, tb] host store; returns it in f64.
+
+        An active ``trace`` recorder switches to the measured path
+        (:meth:`_run_traced`): the dispatch order op-by-op, eagerly, with
+        a fence per op — one span per op across all device streams.  An
+        inactive/absent trace runs the jitted segments unchanged."""
+        if trace is not None and getattr(trace, "active", False):
+            return self._run_traced(host_tiles, trace)
         msched = self.msched
         tb, ndev, cdt = msched.tb, msched.ndev, self.compute_dtype
         host_tiles = np.asarray(host_tiles, dtype=np.float64)
@@ -675,6 +829,82 @@ class MultiDeviceJaxExecutor:
             # row-scoped broadcast — except the diagonal tiles, which no
             # later task consumes and which are therefore never shipped:
             # read each one from its own diagonal owner
+            for k in range(msched.nt):
+                if k % q:
+                    dv = grid_owner(k, k, p, q)
+                    out[k, k] = np.asarray(
+                        host_d[dv][self._local_row[dv][k], k],
+                        dtype=np.float64)
+        self.last_transfer_stats = stats
+        return out
+
+    def _run_traced(self, host_tiles: np.ndarray, trace) -> np.ndarray:
+        """Measured replay: every op of every stream in dispatch order,
+        eagerly, fenced per op — one recorded span per op.
+
+        The numerics are those of the segmented path (same interpreter,
+        same wire table keyed ``(i, j, k, src)``, same class-dtype wire
+        rounding); only the execution granularity changes, so per-op
+        durations are observable.  ``last_transfer_stats`` is maintained
+        exactly as on the jitted path."""
+        msched = self.msched
+        tb, ndev, cdt = msched.tb, msched.ndev, self.compute_dtype
+        lad = msched.plan.ladder
+        host_tiles = np.asarray(host_tiles, dtype=np.float64)
+        host_d = [jax.device_put(jnp.asarray(host_tiles[rows], dtype=cdt),
+                                 self.devices[d])
+                  for d, rows in enumerate(self._rows)]
+        slots_d = [
+            jax.device_put(
+                jnp.zeros((max(msched.stream_nslots(d), 1), tb, tb),
+                          dtype=cdt), self.devices[d])
+            for d in range(ndev)
+        ]
+        jax.block_until_ready((host_d, slots_d))  # setup outside spans
+        stats = {"bcast_ops": 0, "recv_ops": 0,
+                 "bcast_bytes": 0, "recv_bytes": 0}
+        wire_of = {}
+        pending = dict(self._nrecv)
+        for idx, (d, op, phase) in enumerate(
+                msched.iter_dispatch_order(with_phase=True)):
+            t0 = trace.now()
+            lrow = self._local_row[d].__getitem__
+            if op.kind is OpKind.BCAST:
+                key = (op.i, op.j, op.k, op.src)
+                w = host_d[d][lrow(op.i), op.j].astype(
+                    _wire_dtype(lad[op.cls], cdt))
+                jax.block_until_ready(w)
+                wire_of[key] = w
+                stats["bcast_ops"] += 1
+                stats["bcast_bytes"] += w.nbytes * self._nrecv[key]
+            elif op.kind is OpKind.RECV:
+                key = (op.i, op.j, op.k, op.src)
+                t = jax.device_put(wire_of[key], self.devices[d])
+                if op.slot_c >= 0:
+                    slots_d[d] = slots_d[d].at[op.slot_c].set(t.astype(cdt))
+                    jax.block_until_ready(slots_d[d])
+                else:
+                    host_d[d] = host_d[d].at[lrow(op.i), op.j].set(
+                        t.astype(cdt))
+                    jax.block_until_ready(host_d[d])
+                stats["recv_ops"] += 1
+                stats["recv_bytes"] += t.nbytes
+                pending[key] -= 1
+                if pending[key] == 0:
+                    del wire_of[key]
+            else:
+                host_d[d], slots_d[d] = _jx_interpret_op(
+                    host_d[d], slots_d[d], op, lad, self._kf, cdt, lrow)
+                jax.block_until_ready((host_d[d], slots_d[d]))
+            trace.record(idx, op.kind.value, d, t0, trace.now(), op.bytes,
+                         lad[op.cls], op.i, op.j, phase)
+        out = np.empty_like(host_tiles)
+        p, q = msched.grid
+        for d, rows in enumerate(self._rows):
+            if d % q:                   # grid-row peers hold replica slabs
+                continue
+            out[rows] = np.asarray(host_d[d], dtype=np.float64)
+        if q > 1:
             for k in range(msched.nt):
                 if k % q:
                     dv = grid_owner(k, k, p, q)

@@ -164,6 +164,8 @@ class SpilledHostStore:
         self.tile_of: list[Optional[tuple[int, int]]] = [None] * host_slots
         self.fetched_bytes = 0
         self.spilled_bytes = 0
+        self.fetch_ops = 0       # every FETCH, binding (0-byte) included
+        self.spill_ops = 0
 
     def _slab(self, i: int, j: int) -> int:
         try:
@@ -179,6 +181,7 @@ class SpilledHostStore:
         old = self.tile_of[s]
         if old is not None:
             del self.where[old]
+        self.fetch_ops += 1
         if op.bytes:
             self.slabs[s] = self.disk.read_tile(op.i, op.j)
             self.fetched_bytes += op.bytes
@@ -192,6 +195,7 @@ class SpilledHostStore:
                 f"SPILL of tile ({op.i}, {op.j}) from slab {op.slot_c}, "
                 f"but the slab holds {self.tile_of[op.slot_c]}")
         self.disk.write_tile(op.i, op.j, self.slabs[op.slot_c])
+        self.spill_ops += 1
         self.spilled_bytes += op.bytes
 
     def apply(self, op: Op) -> bool:

@@ -52,7 +52,9 @@ class ServiceTimeline:
 
 
 def _pct(xs, q):
-    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+    """Percentile of a series, or ``None`` when nothing was recorded —
+    an empty window reads as "no data", never as a zero-latency claim."""
+    return float(np.percentile(np.asarray(xs), q)) if xs else None
 
 
 class ServiceMetrics:
@@ -113,12 +115,18 @@ class ServiceMetrics:
 
     # -- consumers ---------------------------------------------------------
     def snapshot(self) -> dict:
-        """Reduce everything recorded so far to one JSON-able dict."""
+        """Reduce everything recorded so far to one JSON-able dict.
+
+        Latency/occupancy aggregates are ``None`` (not 0.0) when the
+        window holds no completed requests.  The plan-cache poll happens
+        *outside* ``self._lock`` — it takes the cache's own lock, and
+        nesting foreign locks inside ours is how deadlocks are born.
+        """
+        cache = _api.plan_cache_stats()
         with self._lock:
             recs = [r for r in self._records if r.ok]
             lat = [r.latency for r in recs]
             occ = list(self._batch_occupancy)
-            cache = _api.plan_cache_stats()
             t_lo = min((r.t_arrive for r in recs), default=0.0)
             t_hi = max((r.t_end for r in recs), default=0.0)
             wall = max(t_hi - t_lo, 1e-12)
@@ -130,8 +138,8 @@ class ServiceMetrics:
                 "rejected": self._rejected,
                 "kinds": dict(self._kind_counts),
                 "latency_s": {"p50": _pct(lat, 50), "p99": _pct(lat, 99),
-                              "mean": float(np.mean(lat)) if lat else 0.0,
-                              "max": max(lat, default=0.0)},
+                              "mean": float(np.mean(lat)) if lat else None,
+                              "max": max(lat, default=None)},
                 "queue_depth": {
                     "max": max(self._queue_depth_samples, default=0),
                     "mean": (float(np.mean(self._queue_depth_samples))

@@ -191,6 +191,12 @@ class SolverService:
         self._max_batch = max_batch
         self.admission = AdmissionController(hw)
         self.metrics = ServiceMetrics()
+        self._obs_source = self.metrics.snapshot
+        try:
+            from repro.obs.metrics import REGISTRY
+            REGISTRY.register_source("serve", self._obs_source)
+        except Exception:
+            pass
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._sessions: dict = {}
@@ -219,6 +225,12 @@ class SolverService:
             self._work.notify_all()
         for t in self._threads:
             t.join()
+        try:
+            from repro.obs.metrics import REGISTRY
+            # fn-matched: a newer service that took the name keeps it
+            REGISTRY.unregister_source("serve", self._obs_source)
+        except Exception:
+            pass
 
     # -- tenants -----------------------------------------------------------
     def session(self, key: str, n: int,

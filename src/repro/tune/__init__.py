@@ -36,7 +36,7 @@ from .autotune import (DEFAULT_HW_PRESET, clear_tuning_cache, default_config,
                        resolution_token, resolve_config,
                        set_default_hardware, tune)
 from .calibrate import (calibrate, hardware_fingerprint, model_from_dict,
-                        model_to_dict)
+                        model_to_dict, refine_from_trace)
 from .db import TuningDB, config_from_dict, config_to_dict, default_db_path
 from .search import (Candidate, TuneResult, feasible_tbs, is_feasible,
                      score_config, search, slot_candidates)
@@ -45,6 +45,7 @@ __all__ = [
     "tune", "resolve_config", "resolution_token", "default_config",
     "set_default_hardware", "clear_tuning_cache", "DEFAULT_HW_PRESET",
     "calibrate", "hardware_fingerprint", "model_to_dict", "model_from_dict",
+    "refine_from_trace",
     "TuningDB", "config_to_dict", "config_from_dict", "default_db_path",
     "search", "TuneResult", "Candidate", "feasible_tbs", "is_feasible",
     "slot_candidates", "score_config",

@@ -272,13 +272,99 @@ def _device_mem_bytes() -> float:
     return float(_FALLBACK_MEM_BYTES)
 
 
+def refine_from_trace(trace, base: HardwareModel | None = None,
+                      name: str | None = None) -> HardwareModel:
+    """Refit a :class:`HardwareModel` from a *measured* execution trace.
+
+    ``trace`` is a :class:`repro.obs.TraceRecorder` filled by a traced
+    ``OOCSolver.factor(a, trace=...)`` (its ``meta`` must carry ``tb``).
+    Per-op fenced spans are the honest record of what this machine did
+    on the *actual* factorization ops — better calibration data than any
+    micro-benchmark, because tile shapes, precision round-trips, and
+    dispatch overhead are all the real pipeline's:
+
+    * compute spans refit ``kernel_flops[task][class]`` as
+      ``task_flops(tb) / median(duration)``;
+    * LOAD/STORE spans refit ``h2d_bw``/``d2h_bw`` as the median of
+      ``bytes / duration``; RECV spans refit ``link_bw``; FETCH/SPILL
+      spans refit the disk bandwidths;
+    * everything the trace did not exercise keeps ``base``'s value
+      (default: the ``a100-pcie`` datasheet preset).
+
+    The returned model is the drift feedback loop closed: re-simulating
+    the same schedule with it reduces the total predicted-vs-measured
+    error of :func:`repro.obs.drift_report` (docs/tuning.md).
+    """
+    import dataclasses
+    import statistics
+
+    from repro.core.analytics import HW
+
+    spans = trace.spans
+    if not spans:
+        raise ValueError("refine_from trace is empty: run "
+                         "factor(..., trace=recorder) first")
+    meta = getattr(trace, "meta", {}) or {}
+    tb = meta.get("tb")
+    if not tb:
+        raise ValueError(
+            "trace.meta carries no 'tb': refine from a trace recorded by "
+            "OOCSolver.factor(a, trace=...) (which stamps run metadata), "
+            "or set trace.meta['tb'] yourself")
+    if base is None:
+        base = HW["a100-pcie"]
+
+    by_task: dict = {}
+    bw: dict = {"load": [], "store": [], "recv": [], "fetch": [], "spill": []}
+    for s in spans:
+        dur = s.duration_s
+        if dur <= 0:
+            continue
+        if s.kind in _TASK_FLOP_COUNT:
+            by_task.setdefault((s.kind, s.cls or "f64"), []).append(dur)
+        elif s.kind in bw and s.bytes > 0:
+            bw[s.kind].append(s.bytes / dur)
+    if not by_task and not any(bw.values()):
+        raise ValueError("trace contains no compute or transfer spans to "
+                         "refine from")
+
+    kernel_flops = {task: dict(per)
+                    for task, per in (base.kernel_flops or {}).items()}
+    for (task, cls_name), durs in by_task.items():
+        rate = _TASK_FLOP_COUNT[task](tb) / statistics.median(durs)
+        kernel_flops.setdefault(task, {})[cls_name] = rate
+    # class peaks follow the measured GEMM rates (the dominant kernel),
+    # exactly as the micro-benchmark calibration does
+    flops = dict(base.flops)
+    flops.update(kernel_flops.get("gemm", {}))
+
+    def med(rates, fallback):
+        return statistics.median(rates) if rates else fallback
+
+    return dataclasses.replace(
+        base,
+        name=name or f"refined-{base.name}",
+        flops=flops,
+        kernel_flops=kernel_flops,
+        h2d_bw=med(bw["load"], base.h2d_bw),
+        d2h_bw=med(bw["store"], base.d2h_bw),
+        link_bw=med(bw["recv"], base.link_bw),
+        disk_read_bw=med(bw["fetch"], base.disk_read_bw),
+        disk_write_bw=med(bw["spill"], base.disk_write_bw),
+        source="measured",
+        fingerprint=hardware_fingerprint(),
+    )
+
+
 def calibrate(tb: int = 256,
               classes=None,
               repeats: int = 3,
               transfer_sizes_mb=(1, 8, 32),
               mem_bytes: float | None = None,
               name: str | None = None,
-              disk_dir: str | None = None) -> HardwareModel:
+              disk_dir: str | None = None,
+              refine_from=None,
+              base: HardwareModel | None = None) -> HardwareModel:
     """Measure the live backend and return a ``source="measured"`` model.
 
     The result plugs into everything the datasheet presets do —
@@ -290,7 +376,14 @@ def calibrate(tb: int = 256,
     broadcasts — and the device's actual memory capacity (``mem_bytes``
     overrides detection, e.g. to model a smaller slot budget than the
     hardware has).
+
+    ``refine_from``: instead of running micro-benchmarks, refit the
+    model from a measured execution trace
+    (:class:`repro.obs.TraceRecorder`) — see :func:`refine_from_trace`;
+    ``base`` seeds the un-exercised fields (default ``a100-pcie``).
     """
+    if refine_from is not None:
+        return refine_from_trace(refine_from, base=base, name=name)
     import jax
     classes = tuple(classes) if classes is not None else _ALL_CLASSES
     for c in classes:

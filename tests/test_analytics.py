@@ -151,3 +151,59 @@ def test_ascii_trace_renders():
     res = simulate(sched, HW["gh200"], record_timeline=True)
     s = ascii_trace(res)
     assert "Work" in s and "|" in s
+
+
+def test_chrome_trace_spill_schedule_has_disk_lane(tmp_path):
+    """A spill schedule's simulated timeline renders with a ``dsk`` lane
+    whose FETCH/SPILL events are well-formed chrome://tracing JSON."""
+    import json
+
+    import repro
+    from repro.core.analytics import chrome_trace
+
+    plan = repro.plan(96, repro.CholeskyConfig(tb=16, policy="v3",
+                                               host_slots=8,
+                                               backend="numpy"))
+    res = plan.simulate(HW["a100-pcie"], record_timeline=True)
+    path = tmp_path / "spill.trace.json"
+    trace = chrome_trace(res, path)
+    assert json.loads(path.read_text())["traceEvents"] == trace["traceEvents"]
+    lanes = {e["args"]["name"] for e in trace["traceEvents"]
+             if e["ph"] == "M"}
+    assert "dsk" in lanes and {"h2d", "cmp", "d2h"} <= lanes
+    xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert xs and all(e["ts"] >= 0 and e["dur"] >= 0 for e in xs)
+    disk = [e for e in xs if e["cat"] == "dsk"]
+    assert disk and all(e["name"][0] in "FW" for e in disk)
+    # within a lane, the simulator's spans are issue-ordered: monotone ts
+    by_lane: dict = {}
+    for e in xs:
+        by_lane.setdefault(e["cat"], []).append(e["ts"])
+    for lane_ts in by_lane.values():
+        assert lane_ts == sorted(lane_ts)
+
+
+def test_chrome_trace_lookahead_pipe_lanes(tmp_path):
+    """lookahead > 0 multi-device timelines carry per-device ``d*:pipe``
+    lanes splitting (colored) lookahead-panel work from the trailing
+    update."""
+    import json
+
+    from repro.core.analytics import chrome_trace, simulate_multi
+    from repro.core.schedule import build_multidevice_schedule
+
+    m = build_multidevice_schedule(8, 16, 2, "v3", lookahead=1)
+    res = simulate_multi(m, HW["a100-pcie"], record_timeline=True)
+    path = tmp_path / "lookahead.trace.json"
+    trace = chrome_trace(res, path)
+    assert json.loads(path.read_text())["traceEvents"] == trace["traceEvents"]
+    lanes = {e["args"]["name"] for e in trace["traceEvents"]
+             if e["ph"] == "M"}
+    assert {"d0:pipe", "d1:pipe", "d0:cmp", "link"} <= lanes
+    pipe = [e for e in trace["traceEvents"]
+            if e["ph"] == "X" and e["cat"].endswith(":pipe")]
+    ahead = [e for e in pipe if e["name"].startswith("ahead:")]
+    trail = [e for e in pipe if e["name"].startswith("trail:")]
+    assert ahead and trail and len(ahead) + len(trail) == len(pipe)
+    assert all("cname" in e for e in pipe)        # colored phases
+    assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in pipe)
