@@ -16,6 +16,44 @@ import repro
 from repro import tune
 from repro.core.analytics import HW
 
+# the representative column step _measure_fused times: R=4 rows, K=2
+# history columns -> 8 tile GEMMs + 1 POTRF + 3 TRSMs
+_STEP_R, _STEP_K = 4, 2
+
+
+def _fused_vs_unfused(model, tb: int) -> dict:
+    """Per-class verdict of the calibrated model: would one fused
+    column-step launch beat the same step dispatched op by op?
+
+    Both sides use *this model's* measured rates; the unfused side also
+    pays the measured launch overhead once per tile op (the dispatch
+    cost the megakernel amortizes into a single launch)."""
+    fused_rates = (model.kernel_flops or {}).get("fused_column", {})
+    per_class = {}
+    n_gemm = _STEP_R * _STEP_K
+    n_trsm = _STEP_R - 1
+    flops = {"gemm": 2.0 * tb**3, "trsm": float(tb**3),
+             "potrf": tb**3 / 3.0}
+    total = n_gemm * flops["gemm"] + flops["potrf"] + n_trsm * flops["trsm"]
+    for cls_name, fr in fused_rates.items():
+        t_fused = total / fr + model.launch_overhead
+        t_unfused = (n_gemm * flops["gemm"] / model.task_rate("gemm", cls_name)
+                     + flops["potrf"] / model.task_rate("potrf", cls_name)
+                     + n_trsm * flops["trsm"] / model.task_rate("trsm",
+                                                                cls_name)
+                     + (n_gemm + n_trsm + 1) * model.launch_overhead)
+        per_class[cls_name] = {
+            "fused_s": t_fused, "unfused_s": t_unfused,
+            "won": t_fused < t_unfused,
+        }
+    won = [v["won"] for v in per_class.values()]
+    return {
+        "tb": tb, "per_class": per_class,
+        # headline: the fused path wins on this backend if it beats the
+        # op-by-op dispatch for the majority of measured classes
+        "fused_won": bool(won) and sum(won) * 2 >= len(won),
+    }
+
 
 def _ooc_n(mem_bytes: float) -> int:
     """Smallest power-of-two-ish n whose f64 matrix is ~2x device memory
@@ -57,10 +95,14 @@ def run(out):
     n = _ooc_n(model.mem_bytes)
     result = tune.tune(n, hw=model, use_db=False)
     b = result.best
+    fused = _fused_vs_unfused(model, tb=64)
     out(f"[measured ] {model.name} (fp={model.fingerprint}, "
         f"{model.mem_bytes/1e9:.0f} GB): n={n} tuned tb={b.config.tb} "
         f"{b.config.policy} slots={b.config.cache_slots} -> "
-        f"{b.makespan:.2f}s")
+        f"{b.makespan:.2f}s   fused megakernel "
+        f"{'wins' if fused['fused_won'] else 'loses'} on "
+        f"{sum(v['won'] for v in fused['per_class'].values())}/"
+        f"{len(fused['per_class'])} classes")
     out("")
     return {
         "presets": rows,
@@ -71,5 +113,6 @@ def run(out):
             "mem_gb": model.mem_bytes / 1e9,
             "n": n,
             "tuned": b.row(),
+            "fused_vs_unfused": fused,
         },
     }

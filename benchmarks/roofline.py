@@ -1,52 +1,107 @@
-"""Roofline table: read the dry-run artifacts and print §Roofline."""
-import json
-import os
+"""Kernel launch accounting + per-class tile-op roofline
+(``BENCH_kernels.json``).
 
-from repro.configs import ARCHS, SHAPES
+Three views of the numerical hot path the executors dispatch:
 
-_DEFAULT = "/root/repo/experiments/dryrun_final"
-if not os.path.isdir(_DEFAULT):          # fall back to the baseline sweep
-    _DEFAULT = "/root/repo/experiments/dryrun"
-DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", _DEFAULT)
+* **launch counts** — one factorization executed unfused (one kernel
+  per tile op) and fused (``fuse_columns=True``: one megakernel per
+  column step), counted through
+  :func:`repro.kernels.fused_column.launch_counts`.  The fused path's
+  acceptance criterion — exactly 1 launch per column step on the
+  paper's policies — is asserted here, so the JSON artifact doubles as
+  a regression gate.
+* **fused-vs-unfused wall clock** — the same schedule run both ways on
+  the live backend (interpret-mode Pallas on CPU CI; the same code
+  path compiles on TPU).
+* **per-class tile-op roofline** — measured kernel rates per precision
+  class (:func:`repro.tune.calibrate._measure_kernels`, the executors'
+  own kernel fns) next to the arithmetic intensity of a tile GEMM at
+  that class's storage bytes: ``intensity = flops / bytes_moved``, a
+  tile GEMM moving three operand tiles in and one result out at
+  ``BYTES[class] * tb^2`` each.
+"""
+import time
+
+import jax.numpy as jnp
+
+from repro.core.cholesky import make_jax_executor
+from repro.core.precision import BYTES, LADDERS
+from repro.core.schedule import build_schedule
+from repro.core.tiling import random_spd, to_tiles
+from repro.kernels.fused_column import launch_counts, reset_launch_counts
+from repro.tune.calibrate import _TASK_FLOP_COUNT, _measure_kernels
+
+NT, TB = 6, 32
+CLASSES = ("f64", "f32", "bf16", "f8e4m3", "f8e4m3s")
+
+# payload tiles a single tile op moves (operands in + result out)
+_TILES_MOVED = {"gemm": 4, "syrk": 3, "trsm": 3, "potrf": 2}
 
 
-def load_records(mesh="single"):
-    recs = {}
-    if not os.path.isdir(DRYRUN_DIR):
-        return recs
-    for arch in ARCHS:
-        for shape in SHAPES:
-            path = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{mesh}.json")
-            if os.path.exists(path):
-                with open(path) as f:
-                    recs[(arch, shape)] = json.load(f)
-    return recs
+def _time_executor(exe, tiles, repeats=3):
+    exe(tiles).block_until_ready()        # trace + compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        exe(tiles).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def run(out):
-    out("== Roofline terms per (arch x shape), single-pod 16x16 mesh ==")
-    recs = load_records("single")
-    if not recs:
-        out("  (no dry-run artifacts found; run "
-            "python -m repro.launch.dryrun --all first)")
-        out("")
-        return
-    out(f"  {'arch':24s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
-        f"{'collect':>9s} {'bound':9s} {'useful':>7s}")
-    for (arch, shape), r in sorted(recs.items()):
-        if r["status"] == "skipped":
-            out(f"  {arch:24s} {shape:12s} {'—':>9s} {'—':>9s} {'—':>9s} "
-                f"{'skipped':9s}     n/a   ({r['reason'][:40]})")
-            continue
-        if r["status"] != "ok":
-            out(f"  {arch:24s} {shape:12s}  FAILED")
-            continue
-        rf = r["roofline"]
-        out(f"  {arch:24s} {shape:12s} {rf['t_compute_s']:9.4f} "
-            f"{rf['t_memory_s']:9.4f} {rf['t_collective_s']:9.4f} "
-            f"{rf['dominant']:9s} {rf.get('useful_fraction', 0):7.3f}")
-    n_ok = sum(r["status"] == "ok" for r in recs.values())
-    n_skip = sum(r["status"] == "skipped" for r in recs.values())
-    out(f"  -- {n_ok} ok, {n_skip} skipped (documented), "
-        f"{len(recs) - n_ok - n_skip} failed --")
+    out("== kernels: launch accounting + per-class tile-op roofline ==")
+    tiles = jnp.asarray(to_tiles(random_spd(NT * TB, seed=1), TB))
+    sched = build_schedule(NT, TB, "v3")
+    n_compute = NT * (NT + 1) * (NT + 2) // 6   # tile ops of an NT grid
+
+    launches, walls = {}, {}
+    for fused in (False, True):
+        exe = make_jax_executor(sched, fuse_columns=fused)
+        reset_launch_counts()
+        exe(tiles).block_until_ready()    # one counted factorization
+        launches[fused] = launch_counts()
+        walls[fused] = _time_executor(exe, tiles)
+
+    # acceptance gate: 1 megakernel per column step, zero per-tile-op
+    # kernels on the fused path; exactly one kernel per tile op unfused
+    assert launches[True]["fused_column"] == NT, launches
+    assert launches[True]["tile_op"] == 0, launches
+    assert launches[False]["tile_op"] == n_compute, launches
+    assert launches[False]["fused_column"] == 0, launches
+
+    out(f"  v3 nt={NT} tb={TB}: unfused {launches[False]['tile_op']} "
+        f"tile-op launches ({walls[False]*1e3:.1f} ms)  |  fused "
+        f"{launches[True]['fused_column']} column-step launches "
+        f"({walls[True]*1e3:.1f} ms)  -> "
+        f"{launches[False]['tile_op'] / NT:.1f}x fewer dispatches/step")
+
+    out(f"  {'class':8s} {'gemm GF/s':>10s} {'potrf GF/s':>11s} "
+        f"{'intensity':>10s}  (tile GEMM flop/byte)")
+    rates = _measure_kernels(TB, CLASSES, 1)
+    roofline = {}
+    for cls_name in CLASSES:
+        moved = _TILES_MOVED["gemm"] * BYTES[cls_name] * TB * TB
+        intensity = _TASK_FLOP_COUNT["gemm"](TB) / moved
+        roofline[cls_name] = {
+            "bytes_per_tile": BYTES[cls_name] * TB * TB,
+            "gemm_intensity_flop_per_byte": intensity,
+            "rates_flops": {t: rates[t][cls_name] for t in rates},
+        }
+        out(f"  {cls_name:8s} {rates['gemm'][cls_name]/1e9:10.2f} "
+            f"{rates['potrf'][cls_name]/1e9:11.2f} {intensity:10.1f}")
     out("")
+
+    return {
+        "nt": NT, "tb": TB, "policy": "v3",
+        "launches": {
+            "unfused": launches[False],
+            "fused": launches[True],
+            "per_column_step_fused":
+                launches[True]["fused_column"] / NT,
+            "compute_ops": n_compute,
+        },
+        "wall_s": {"unfused": walls[False], "fused": walls[True]},
+        "fused_won_wall_clock": walls[True] < walls[False],
+        "roofline": roofline,
+        "ladders": {name: list(lad) for name, lad in LADDERS.items()},
+    }

@@ -30,7 +30,7 @@ BENCHES = {
     "fig12": fig12_mxp_volume,
     "fig13": fig13_traces,
     "perf_cholesky": perf_cholesky,
-    "roofline": roofline,
+    "kernels": roofline,
     "tune": bench_tune,
     "serve": bench_serve,
     "spill": bench_spill,

@@ -88,7 +88,7 @@ from repro import obs, serve, tune
 from repro.obs import NullRecorder, TraceRecorder, drift_report
 from repro.serve import SolverService
 
-__version__ = "0.9.0"
+__version__ = "0.10.0"
 
 __all__ = [
     "__version__",

@@ -73,11 +73,19 @@ class HardwareModel:
     def task_rate(self, task: str, cls_name: str) -> float:
         """FLOP/s for one task kind (``"gemm"``/``"syrk"``/...) at one
         precision class; falls back to the per-class peak when no
-        per-kernel measurement is recorded."""
+        per-kernel measurement is recorded.  The scaled-FP8 class
+        ``"f8e4m3s"`` runs on the same e4m3 GEMM engine as the unscaled
+        class (the power-of-two scale folds into the epilogue), so
+        models that predate it alias its rate to ``"f8e4m3"``."""
         if self.kernel_flops:
             per_cls = self.kernel_flops.get(task)
-            if per_cls and cls_name in per_cls:
-                return per_cls[cls_name]
+            if per_cls:
+                if cls_name in per_cls:
+                    return per_cls[cls_name]
+                if cls_name == "f8e4m3s" and "f8e4m3" in per_cls:
+                    return per_cls["f8e4m3"]
+        if cls_name not in self.flops and cls_name == "f8e4m3s":
+            return self.flops["f8e4m3"]
         return self.flops[cls_name]
 
     def max_cache_slots(self, tb: int, reserve_slots: int = 0) -> int:

@@ -127,6 +127,9 @@ class CholeskyConfig:
     backend: str = "auto"                     # auto -> jax if devices suffice
     compute_dtype: Any = None                 # jax backend compute dtype
     use_pallas: bool = False                  # Pallas tile kernels (jax)
+    fuse_columns: bool = False                # fused column-step megakernel
+                                              #   (one Pallas launch per
+                                              #   column step, jax backend)
     block: tuple = _DEFAULT_BLOCK             # v4 (h, w) update block
     ndev: int = 1                             # block-cyclic devices
     grid: Optional[tuple] = None              # (p, q) device grid; None =
@@ -253,6 +256,11 @@ class CholeskyConfig:
                         f"mem_bytes={mem / 1e9:.1f} GB")
         if self.use_pallas and self.resolved_backend() != "jax":
             raise ValueError("use_pallas requires the 'jax' backend, "
+                             f"got backend={self.backend!r} "
+                             f"(resolved {self.resolved_backend()!r})")
+        if self.fuse_columns and self.resolved_backend() != "jax":
+            raise ValueError("fuse_columns (the fused column-step "
+                             "megakernel) requires the 'jax' backend, "
                              f"got backend={self.backend!r} "
                              f"(resolved {self.resolved_backend()!r})")
         if self.compute_dtype is not None and self.resolved_backend() != "jax":
@@ -628,7 +636,8 @@ class _CompiledExecutor:
         if cfg.ndev > 1:
             from .cholesky import make_multidevice_jax_executor
             self.multidevice = make_multidevice_jax_executor(
-                plan.schedule, self.dtype, use_pallas=cfg.use_pallas)
+                plan.schedule, self.dtype, use_pallas=cfg.use_pallas,
+                fuse_columns=cfg.fuse_columns)
             self.fn = self.multidevice
             return
         if cfg.host_slots > 0:
@@ -637,12 +646,14 @@ class _CompiledExecutor:
             from .cholesky import SpillJaxExecutor
             self.spill = SpillJaxExecutor(plan.single_schedule(),
                                           self.dtype,
-                                          use_pallas=cfg.use_pallas)
+                                          use_pallas=cfg.use_pallas,
+                                          fuse_columns=cfg.fuse_columns)
             self.fn = self.spill
             return
         from .cholesky import make_jax_executor
         raw = make_jax_executor(plan.single_schedule(), self.dtype,
-                                use_pallas=cfg.use_pallas)
+                                use_pallas=cfg.use_pallas,
+                                fuse_columns=cfg.fuse_columns)
 
         def traced(host_tiles):
             # body runs only while tracing: counts jit compilations

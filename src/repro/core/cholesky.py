@@ -54,7 +54,9 @@ import ml_dtypes
 
 from .schedule import (HOST_IO, MultiDeviceSchedule, Op, OpKind, Schedule,
                        grid_owner)
-from .precision import PrecisionPlan, assign_precision, tile_norms, uniform_plan
+from .precision import (PrecisionPlan, assign_precision, tile_norms,
+                        uniform_plan)
+from .precision import tile_amax as _tile_amax
 
 _NP_DTYPES = {
     "f64": np.float64,
@@ -62,6 +64,9 @@ _NP_DTYPES = {
     "f16": np.float16,
     "bf16": ml_dtypes.bfloat16,
     "f8e4m3": ml_dtypes.float8_e4m3fn,
+    # the *scaled* FP8 class stores the same e4m3 payload; the per-tile
+    # power-of-two scale applied around the cast is what differs
+    "f8e4m3s": ml_dtypes.float8_e4m3fn,
 }
 _JNP_DTYPES = {
     "f64": jnp.float64,
@@ -69,6 +74,7 @@ _JNP_DTYPES = {
     "f16": jnp.float16,
     "bf16": jnp.bfloat16,
     "f8e4m3": jnp.float8_e4m3fn,
+    "f8e4m3s": jnp.float8_e4m3fn,
 }
 
 
@@ -76,7 +82,20 @@ _JNP_DTYPES = {
 # NumPy oracle
 # --------------------------------------------------------------------------
 
+def _np_fp8_scale(amax: float) -> float:
+    """Store-time power-of-two scale of a scaled-FP8 tile (the frexp form
+    of :func:`repro.core.precision.fp8_scale` — see the jax twin
+    ``fused_column._fp8_scale_of`` for why frexp and not log2/floor)."""
+    if not amax > 0.0 or not np.isfinite(amax):
+        return 1.0
+    m, e = np.frexp(amax)
+    return float(2.0 ** (int(8 - e) + (1 if m <= 0.875 else 0)))
+
+
 def _np_round(x: np.ndarray, cls_name: str) -> np.ndarray:
+    if cls_name == "f8e4m3s":
+        s = _np_fp8_scale(float(np.max(np.abs(x))))
+        return ((x * s).astype(_NP_DTYPES[cls_name]).astype(x.dtype)) / s
     return x.astype(_NP_DTYPES[cls_name]).astype(x.dtype)
 
 
@@ -283,11 +302,25 @@ def run_multidevice_spill(store, msched: MultiDeviceSchedule, trace=None):
 # JAX executor (single jit, schedule unrolled)
 # --------------------------------------------------------------------------
 
+def _jx_fp8_scale(amax, compute_dtype):
+    """Store-time power-of-two scale (jax twin of :func:`_np_fp8_scale`;
+    frexp keeps the two bitwise-identical across backends)."""
+    m, e = jnp.frexp(amax)
+    exp = (8 - e) + jnp.where(m <= 0.875, 1, 0)
+    s = jnp.exp2(exp.astype(compute_dtype))
+    ok = jnp.isfinite(amax) & (amax > 0)
+    return jnp.where(ok, s, jnp.asarray(1.0, compute_dtype))
+
+
 def _jx_round(x, cls_name, compute_dtype):
     if _JNP_DTYPES[cls_name] == compute_dtype:
         return x
     if cls_name == "f64" and not jax.config.jax_enable_x64:
         return x  # f64 class degrades to compute dtype when x64 is off
+    if cls_name == "f8e4m3s":
+        s = _jx_fp8_scale(jnp.max(jnp.abs(x)), compute_dtype)
+        return ((x * s).astype(_JNP_DTYPES[cls_name])
+                .astype(compute_dtype)) / s
     return x.astype(_JNP_DTYPES[cls_name]).astype(compute_dtype)
 
 
@@ -297,20 +330,32 @@ def _trsm_jax(l, c):
 
 
 def _make_kernel_fns(use_pallas: bool, interpret: bool):
+    from repro.kernels.fused_column import count_tile_op
+
+    def counted(fn):
+        # trace-time dispatch counter, symmetric with the fused path's
+        # launch accounting (repro.kernels.fused_column.launch_counts)
+        def wrapped(*args):
+            count_tile_op()
+            return fn(*args)
+        return wrapped
+
     if not use_pallas:
-        return {
+        fns = {
             "potrf": lambda c: jnp.linalg.cholesky(0.5 * (c + c.T)),
             "trsm": _trsm_jax,
             "syrk": lambda c, a: c - a @ a.T,
             "gemm": lambda c, a, b: c - a @ b.T,
         }
-    from repro.kernels import ops as kops
-    return {
-        "potrf": partial(kops.potrf, interpret=interpret),
-        "trsm": partial(kops.trsm, interpret=interpret),
-        "syrk": partial(kops.syrk_update, interpret=interpret),
-        "gemm": partial(kops.gemm_update, interpret=interpret),
-    }
+    else:
+        from repro.kernels import ops as kops
+        fns = {
+            "potrf": partial(kops.potrf, interpret=interpret),
+            "trsm": partial(kops.trsm, interpret=interpret),
+            "syrk": partial(kops.syrk_update, interpret=interpret),
+            "gemm": partial(kops.gemm_update, interpret=interpret),
+        }
+    return {name: counted(fn) for name, fn in fns.items()}
 
 
 def _jx_interpret_op(host, slots, op: Op, lad, kf, compute_dtype, lrow):
@@ -343,13 +388,301 @@ def _jx_interpret_op(host, slots, op: Op, lad, kf, compute_dtype, lrow):
     return host, slots
 
 
+# --------------------------------------------------------------------------
+# Fused column-step tracing (CholeskyConfig.fuse_columns)
+# --------------------------------------------------------------------------
+#
+# The unfused trace dispatches one kernel per tile op.  The fused trace
+# groups the compute ops of one column step (same ``op.k``) and replaces
+# the whole group — SYRK wave + POTRF on the diagonal, GEMM wave + TRSM
+# per row — with a single ``fused_column_step`` pallas launch
+# (repro.kernels.fused_column).  LOAD/STORE/ALLOC/FREE are *not* fused:
+# the data-movement record (bytes, digests, crosschecks) is the
+# schedule's contract and stays op-for-op identical; LOADs execute ahead
+# of the group and STOREs are deferred behind it, with explicit hazard
+# checks forcing a flush whenever the reordering could be observed.
+
+_FUSABLE = (OpKind.SYRK, OpKind.GEMM, OpKind.POTRF, OpKind.TRSM)
+
+
+def _parse_column_group(group):
+    """Match one column step's pending group against the canonical
+    pattern the megakernel implements; ``None`` means run it per-op.
+
+    Expected compute shape: an optional diagonal phase (SYRKs into one
+    slot, then POTRF on it) followed by zero or more rows (GEMMs into one
+    slot, then TRSM on it against the column's diagonal slot), with a
+    uniform history depth and identical B-operand slot sequence across
+    rows (the fused grid batches the rows over one shared B stack).
+    STOREs riding in the group must be expressible as the launch
+    epilogue: at most one per slot, positioned after the slot's last
+    compute (the diagonal's directly after its POTRF — the row TRSMs
+    then solve against the epilogue-rounded scratch factor).  Anything
+    else — advance-update chunks of a lookahead schedule, v4 block
+    phases, slot-reuse corner cases, mid-accumulation partial stores —
+    falls back to the per-op interpreter.
+    """
+    ops = [op for op, _s in group if op.kind is not OpKind.STORE]
+    last_compute_pos = {}
+    for pos, (op, _s) in enumerate(group):
+        if op.kind is not OpKind.STORE:
+            last_compute_pos[op.slot_c] = pos
+    store_of = {}
+    for pos, (op, _s) in enumerate(group):
+        if op.kind is OpKind.STORE:
+            if op.slot_c in store_of:       # two roundings of one slot
+                return None
+            if pos < last_compute_pos.get(op.slot_c, -1):
+                return None                 # mid-accumulation store
+            store_of[op.slot_c] = op
+    idx, n = 0, len(ops)
+    syrks: list = []
+    potrf = None
+    while idx < n and ops[idx].kind is OpKind.SYRK:
+        syrks.append(ops[idx])
+        idx += 1
+    if idx < n and ops[idx].kind is OpKind.POTRF:
+        potrf = ops[idx]
+        idx += 1
+        if any(o.slot_c != potrf.slot_c for o in syrks):
+            return None
+    elif syrks:
+        return None
+    rows = []
+    while idx < n:
+        gemms: list = []
+        while idx < n and ops[idx].kind is OpKind.GEMM:
+            gemms.append(ops[idx])
+            idx += 1
+        if idx >= n or ops[idx].kind is not OpKind.TRSM:
+            return None
+        trsm = ops[idx]
+        idx += 1
+        if any(o.slot_c != trsm.slot_c for o in gemms):
+            return None
+        rows.append((gemms, trsm))
+    with_diag = potrf is not None
+    if not with_diag and not rows:
+        return None
+    k_steps = len(syrks) if with_diag else len(rows[0][0])
+    bslots = ([o.slot_a for o in syrks] if with_diag
+              else [o.slot_b for o in rows[0][0]])
+    for gemms, _t in rows:
+        if len(gemms) != k_steps or [o.slot_b for o in gemms] != bslots:
+            return None
+    if with_diag:
+        diag_slot = potrf.slot_c
+    else:
+        diag_slot = rows[0][1].slot_a
+    if any(t.slot_a != diag_slot for _g, t in rows):
+        return None
+    c_slots = ([diag_slot] if with_diag else []) + [t.slot_c for _g, t in rows]
+    if len(set(c_slots)) != len(c_slots):
+        return None
+    if not set(store_of) <= set(c_slots):
+        return None     # a store of a tile this launch doesn't produce
+    operand_slots = set(bslots)
+    for gemms, _t in rows:
+        operand_slots.update(o.slot_a for o in gemms)
+    if set(c_slots) & operand_slots:
+        # an output slot doubling as a history operand: the operand
+        # snapshot would be stale by the time the unfused order reads it
+        return None
+    return {"with_diag": with_diag, "potrf": potrf, "rows": rows,
+            "syrks": syrks, "k_steps": k_steps, "bslots": bslots,
+            "diag_slot": diag_slot, "c_slots": c_slots,
+            "store_of": store_of}
+
+
+def _flush_group_fused(group, c_init, slots, lad, cdt, kf, interpret):
+    """Run one pending group: a single fused launch when it matches the
+    column-step pattern, the per-op interpreter otherwise.
+
+    ``group`` is a list of ``(op, snap)`` pairs — compute ops with their
+    operand values captured at the op's stream position (see
+    :func:`_run_ops_fused`) plus the column's STOREs — and ``c_init``
+    maps each touched slot to its value when the group first saw it;
+    together they reproduce the unfused read order exactly, no matter
+    what LOADs ran in between.  Returns ``(slots, host_writes)`` where
+    ``host_writes`` lists ``(store_op, rounded_tile)`` in stream order
+    for the caller to apply to its host tier.
+    """
+    def val(t):
+        return local[t[1]] if t[0] == "slot" else t[1]
+
+    parsed = _parse_column_group(group)
+    if parsed is None:
+        # per-op replay over the snapshots (not the live slot buffer:
+        # later hoisted LOADs may have re-used operand slots); STORE
+        # roundings apply at their exact stream position
+        local = dict(c_init)
+        host_writes = []
+        for op, snap in group:
+            if op.kind is OpKind.STORE:
+                r = _jx_round(local[op.slot_c], lad[op.cls], cdt)
+                local[op.slot_c] = r
+                host_writes.append((op, r))
+            elif op.kind is OpKind.SYRK:
+                local[op.slot_c] = kf["syrk"](local[op.slot_c],
+                                              val(snap["a"]))
+            elif op.kind is OpKind.GEMM:
+                local[op.slot_c] = kf["gemm"](local[op.slot_c],
+                                              val(snap["a"]),
+                                              val(snap["b"]))
+            elif op.kind is OpKind.POTRF:
+                local[op.slot_c] = kf["potrf"](local[op.slot_c])
+            elif op.kind is OpKind.TRSM:
+                local[op.slot_c] = kf["trsm"](val(snap["l"]),
+                                              local[op.slot_c])
+        for s, v in local.items():
+            slots = slots.at[s].set(v)
+        return slots, host_writes
+
+    from repro.kernels.fused_column import fused_column_step
+    local = c_init     # markers can only name diag (parse rejects others)
+    tb = slots.shape[1]
+    snaps = {id(op): snap for op, snap in group}
+    rows = parsed["rows"]
+    with_diag = parsed["with_diag"]
+    k_steps = parsed["k_steps"]
+    c_slots = parsed["c_slots"]
+    store_of = parsed["store_of"]
+    c_stack = jnp.stack([c_init[s] for s in c_slots])
+    if k_steps:
+        hist_rows = [[val(snaps[id(o)]["a"]) for o in gemms]
+                     for gemms, _t in rows]
+        if with_diag:
+            bhist_tiles = [val(snaps[id(o)]["a"]) for o in parsed["syrks"]]
+            hist_rows = [bhist_tiles] + hist_rows
+        else:
+            bhist_tiles = [val(snaps[id(o)]["b"]) for o in rows[0][0]]
+        hist = jnp.stack([jnp.stack(r) for r in hist_rows])
+        bhist = jnp.stack(bhist_tiles)
+    else:
+        hist = jnp.zeros((len(c_slots), 0, tb, tb), dtype=cdt)
+        bhist = jnp.zeros((0, tb, tb), dtype=cdt)
+    l_kk = (jnp.zeros((tb, tb), dtype=cdt) if with_diag
+            else val(snaps[id(rows[0][1])]["l"]))
+    cls_ids = [store_of[s].cls if s in store_of else -1 for s in c_slots]
+    out = fused_column_step(c_stack, hist, bhist, l_kk, cls_ids,
+                            ladder=lad, with_diag=with_diag,
+                            interpret=interpret)
+    out = out.astype(cdt)
+    slots = slots.at[jnp.asarray(c_slots)].set(out)
+    row_of = {s: r for r, s in enumerate(c_slots)}
+    host_writes = [(op, out[row_of[op.slot_c]])
+                   for op, _s in group if op.kind is OpKind.STORE]
+    return slots, host_writes
+
+
+def _run_ops_fused(ops, host, slots, lad, cdt, kf, interpret,
+                   read_host, write_host):
+    """Trace an op stream with column-step fusion.
+
+    ``read_host(host, op) -> tile`` / ``write_host(host, op, tile) ->
+    host`` abstract the host tier (full store, block-cyclic slab, or
+    spill slab buffer — the three executor contexts).  Compute ops of one
+    column accumulate into a pending group launched as one megakernel.
+    Each op's operands are *snapshotted at its stream position* (a slot
+    marker when the operand is itself a pending group output), so LOADs
+    that later re-use an operand slot need no flush — the executed read
+    order is op-for-op that of the unfused trace.  STOREs are deferred
+    behind the launch; the remaining hazards (a LOAD targeting a pending
+    output slot or a host tile with a deferred STORE, a compute op
+    reading a deferred-STORE slot before its in-place rounding) force a
+    flush.  IO ops themselves are never fused — the schedule's
+    data-movement record is preserved exactly.  Returns the updated
+    ``(host, slots)``.
+    """
+    group: list = []        # (op, operand snapshots); STOREs ride along
+    gwrite: set = set()     # slots the pending group writes (or rounds)
+    c_init: dict = {}       # slot -> value at first group touch
+    dtiles: set = set()     # host tiles with a pending in-group STORE
+
+    def snap_operand(s):
+        if s in gwrite:
+            return ("slot", s)
+        return ("val", slots[s])
+
+    def flush():
+        nonlocal host, slots
+        if not group:
+            return
+        slots, host_writes = _flush_group_fused(group, c_init, slots,
+                                                lad, cdt, kf, interpret)
+        for o, r in host_writes:
+            host = write_host(host, o, r)
+        group.clear()
+        gwrite.clear()
+        c_init.clear()
+        dtiles.clear()
+
+    for op in ops:
+        if op.kind is OpKind.LOAD:
+            if op.slot_c in gwrite or (op.i, op.j) in dtiles:
+                # the slot would be clobbered by the group's scatter, or
+                # the host tile's STORE hasn't landed yet
+                flush()
+            t = _jx_round(read_host(host, op), lad[op.cls], cdt)
+            slots = slots.at[op.slot_c].set(t)
+        elif op.kind is OpKind.STORE:
+            if group:
+                # ride in the group: the rounding applies at this exact
+                # stream position (launch epilogue / fallback replay),
+                # the host write lands at flush
+                if op.slot_c not in gwrite:
+                    c_init[op.slot_c] = slots[op.slot_c]
+                    gwrite.add(op.slot_c)
+                group.append((op, None))
+                dtiles.add((op.i, op.j))
+            else:
+                r = _jx_round(slots[op.slot_c], lad[op.cls], cdt)
+                slots = slots.at[op.slot_c].set(r)
+                host = write_host(host, op, r)
+        elif op.kind in _FUSABLE:
+            if group and op.k != group[0][0].k:
+                flush()
+            snap = {}
+            if op.kind is OpKind.SYRK:
+                snap["a"] = snap_operand(op.slot_a)
+            elif op.kind is OpKind.GEMM:
+                snap["a"] = snap_operand(op.slot_a)
+                snap["b"] = snap_operand(op.slot_b)
+            elif op.kind is OpKind.TRSM:
+                snap["l"] = snap_operand(op.slot_a)
+            if op.slot_c not in gwrite:
+                c_init[op.slot_c] = slots[op.slot_c]
+            group.append((op, snap))
+            gwrite.add(op.slot_c)
+        # ALLOC/FREE are bookkeeping-only, as in the unfused trace
+    flush()
+    return host, slots
+
+
+def _donate_argnums(n: int) -> tuple:
+    """Cross-segment buffer donation for the fused executors: the slab /
+    slot buffers are dead after each segment call (the caller rebinds
+    them to the outputs), so on accelerator backends XLA may reuse their
+    HBM for the results.  CPU ignores donation with a warning per jit —
+    keep it off there."""
+    try:
+        if jax.default_backend() == "cpu":
+            return ()
+    except Exception:
+        return ()
+    return tuple(range(n))
+
+
 def make_jax_executor(sched: Schedule, compute_dtype=jnp.float64,
-                      use_pallas: bool = False, interpret: bool = True):
+                      use_pallas: bool = False, interpret: bool = True,
+                      fuse_columns: bool = False):
     """Build a jit-able ``host_tiles -> factored host_tiles`` function.
 
     The returned function's HLO contains exactly the transfers of the static
     schedule; everything else (overlap, async copies) is XLA's job — the
     deterministic-schedule insight of the paper moved to trace time.
+    ``fuse_columns`` swaps the per-op compute trace for the column-step
+    megakernels (:func:`_run_ops_fused`); the transfers are unchanged.
     """
     if sched.host_slots > 0:
         raise ValueError(
@@ -363,6 +696,12 @@ def make_jax_executor(sched: Schedule, compute_dtype=jnp.float64,
     def run(host_tiles):
         host = host_tiles.astype(compute_dtype)
         slots = jnp.zeros((nslots, tb, tb), dtype=compute_dtype)
+        if fuse_columns:
+            host, _ = _run_ops_fused(
+                sched.ops, host, slots, lad, compute_dtype, kf, interpret,
+                read_host=lambda h, o: h[o.i, o.j],
+                write_host=lambda h, o, r: h.at[o.i, o.j].set(r))
+            return host
         for op in sched.ops:
             host, slots = _jx_interpret_op(host, slots, op, lad, kf,
                                            compute_dtype, lambda i: i)
@@ -430,7 +769,8 @@ class SpillJaxExecutor:
     """
 
     def __init__(self, sched: Schedule, compute_dtype=jnp.float64,
-                 use_pallas: bool = False, interpret: bool = True):
+                 use_pallas: bool = False, interpret: bool = True,
+                 fuse_columns: bool = False):
         if sched.host_slots < 1:
             raise ValueError("SpillJaxExecutor needs a spill schedule "
                              "(build with host_slots > 0)")
@@ -439,12 +779,24 @@ class SpillJaxExecutor:
         self.jit_traces = 0
         self.last_io_stats = None     # executed FETCH/SPILL counters
         self._kf = _make_kernel_fns(use_pallas, interpret)
+        self._interpret = interpret
+        self._fuse = fuse_columns
         self._nslots = _device_nslots(sched.ops)
         self._segments = self._build_segments()
 
     def _make_segment(self, ops: list[Op]):
         lad, cdt, kf = self.sched.plan.ladder, self.compute_dtype, self._kf
         ops = tuple(ops)
+        interpret = self._interpret
+        if self._fuse:
+            def seg(slabs, slots):
+                self.jit_traces += 1    # body runs only while tracing
+                return _run_ops_fused(
+                    ops, slabs, slots, lad, cdt, kf, interpret,
+                    read_host=lambda h, o: h[o.hslot],
+                    write_host=lambda h, o, r: h.at[o.hslot].set(r))
+
+            return jax.jit(seg, donate_argnums=_donate_argnums(2))
 
         def seg(slabs, slots):
             self.jit_traces += 1        # body runs only while tracing
@@ -484,6 +836,7 @@ class SpillJaxExecutor:
             slot_b: int
             cls: int
             hslot: int
+            k: int = -1     # column step, for fused-trace grouping
 
         where: dict[tuple[int, int], int] = {}
         segments = []       # list of ("io", op) | ("run", jitted fn)
@@ -507,12 +860,13 @@ class SpillJaxExecutor:
             elif op.kind in (OpKind.LOAD, OpKind.STORE):
                 pending.append(_SlabOp(op.kind, op.i, op.j, op.slot_c,
                                        op.slot_a, op.slot_b, op.cls,
-                                       where[(op.i, op.j)]))
+                                       where[(op.i, op.j)], op.k))
             elif op.kind in (OpKind.ALLOC, OpKind.FREE):
                 continue
             else:
                 pending.append(_SlabOp(op.kind, op.i, op.j, op.slot_c,
-                                       op.slot_a, op.slot_b, op.cls, -1))
+                                       op.slot_a, op.slot_b, op.cls, -1,
+                                       op.k))
         close_run()
         return segments
 
@@ -631,6 +985,30 @@ def _wire_dtype(cls_name: str, compute_dtype):
     return _JNP_DTYPES[cls_name]
 
 
+def _make_wire(tile, cls_name, compute_dtype):
+    """Round a finalized tile onto the interconnect wire.
+
+    Every wire is a ``(payload, scale)`` pair so the pytree structure is
+    class-independent: plain classes ship their class-dtype payload with
+    ``scale=None`` (an empty pytree leaf — nothing travels), the scaled
+    FP8 class ships the e4m3 payload plus its power-of-two scale scalar.
+    Byte accounting counts the payload only — the scale is 4 bytes of
+    metadata riding the ``[Nt, Nt]`` scale table, not tile traffic.
+    """
+    if cls_name == "f8e4m3s":
+        s = _jx_fp8_scale(jnp.max(jnp.abs(tile)), compute_dtype)
+        return ((tile * s).astype(_JNP_DTYPES[cls_name]), s)
+    return (tile.astype(_wire_dtype(cls_name, compute_dtype)), None)
+
+
+def _unwire(wire, compute_dtype):
+    """Promote a received wire back to the compute dtype (inverting the
+    scaled-FP8 store-time scale when one rode along)."""
+    payload, scale = wire
+    t = payload.astype(compute_dtype)
+    return t if scale is None else t / scale
+
+
 class MultiDeviceJaxExecutor:
     """Replay a :class:`MultiDeviceSchedule` on ``ndev`` real JAX devices.
 
@@ -678,7 +1056,7 @@ class MultiDeviceJaxExecutor:
 
     def __init__(self, msched: MultiDeviceSchedule, compute_dtype=jnp.float64,
                  use_pallas: bool = False, interpret: bool = True,
-                 devices=None):
+                 devices=None, fuse_columns: bool = False):
         if msched.ndev < 2:
             raise ValueError(
                 f"MultiDeviceJaxExecutor needs ndev >= 2 (got "
@@ -698,6 +1076,8 @@ class MultiDeviceJaxExecutor:
         self.jit_traces = 0
         self.last_transfer_stats = None
         self._kf = _make_kernel_fns(use_pallas, interpret)
+        self._interpret = interpret
+        self._fuse = fuse_columns
         # device d's host slab holds the rows of its grid row (d // q);
         # tile-level ownership within the slab follows schedule.grid_owner,
         # the same rule the builder and column_device_order use
@@ -727,23 +1107,32 @@ class MultiDeviceJaxExecutor:
         body = tuple(o for o in ops
                      if o.kind is not OpKind.RECV and o.kind is not OpKind.BCAST)
         lrow = self._local_row[d].__getitem__
+        fuse, kf, interpret = self._fuse, self._kf, self._interpret
 
         def seg(host, slots, recv_tiles):
             self.jit_traces += 1        # body runs only while tracing
             for o, t in zip(recv_ops, recv_tiles):
+                t = _unwire(t, cdt)
                 if o.slot_c >= 0:
-                    slots = slots.at[o.slot_c].set(t.astype(cdt))
+                    slots = slots.at[o.slot_c].set(t)
                 else:
-                    host = host.at[lrow(o.i), o.j].set(t.astype(cdt))
-            for o in body:
-                host, slots = _jx_interpret_op(host, slots, o, lad,
-                                               self._kf, cdt, lrow)
+                    host = host.at[lrow(o.i), o.j].set(t)
+            if fuse:
+                host, slots = _run_ops_fused(
+                    body, host, slots, lad, cdt, kf, interpret,
+                    read_host=lambda h, o: h[lrow(o.i), o.j],
+                    write_host=lambda h, o, r: h.at[lrow(o.i), o.j].set(r))
+            else:
+                for o in body:
+                    host, slots = _jx_interpret_op(host, slots, o, lad,
+                                                   kf, cdt, lrow)
             wires = tuple(
-                host[lrow(o.i), o.j].astype(_wire_dtype(lad[o.cls], cdt))
+                _make_wire(host[lrow(o.i), o.j], lad[o.cls], cdt)
                 for o in bcast_ops)
             return host, slots, wires
 
-        return jax.jit(seg), recv_ops, bcast_ops
+        donate = _donate_argnums(2) if fuse else ()
+        return jax.jit(seg, donate_argnums=donate), recv_ops, bcast_ops
 
     def _build_segments(self):
         """Compile one jitted segment per dispatch chunk.
@@ -769,8 +1158,26 @@ class MultiDeviceJaxExecutor:
                     key = (o.i, o.j, o.k, o.src)
                     nrecv[key] = nrecv.get(key, 0) + 1
         self._nrecv = nrecv
-        return [(d,) + self._make_segment(d, msched.streams[d][start:stop])
-                for d, start, stop, _k, _phase in msched.dispatch_chunks()]
+        chunks = [(d, list(msched.streams[d][start:stop]))
+                  for d, start, stop, _k, _phase in msched.dispatch_chunks()]
+        if self._fuse:
+            # PR 3 leftover: segment fusion across adjacent dispatch
+            # chunks of the same device (consecutive same-owner columns,
+            # owner tail + next head, back-to-back worker waves).  Safe
+            # exactly when the absorbed chunk has no RECV ops: cross-
+            # device data flows only over wires, so a recv-free chunk
+            # cannot depend on anything dispatched between the two — and
+            # pulling its BCAST publications earlier only ever helps
+            # (wire keys are unique per (i, j, k, src)).
+            merged: list = []
+            for d, ops in chunks:
+                if (merged and merged[-1][0] == d
+                        and not any(o.kind is OpKind.RECV for o in ops)):
+                    merged[-1][1].extend(ops)
+                else:
+                    merged.append((d, ops))
+            chunks = merged
+        return [(d,) + self._make_segment(d, ops) for d, ops in chunks]
 
     # -- run time ----------------------------------------------------------
     def __call__(self, host_tiles: np.ndarray, trace=None) -> np.ndarray:
@@ -810,13 +1217,13 @@ class MultiDeviceJaxExecutor:
                 if pending[key] == 0:   # last receiver landed: free the wire
                     del wire_of[key]
             stats["recv_ops"] += len(recv_tiles)
-            stats["recv_bytes"] += sum(t.nbytes for t in recv_tiles)
+            stats["recv_bytes"] += sum(t[0].nbytes for t in recv_tiles)
             host_d[d], slots_d[d], wires = fn(host_d[d], slots_d[d],
                                               recv_tiles)
             for o, t in zip(bcast_ops, wires):
                 key = (o.i, o.j, o.k, o.src)
                 wire_of[key] = t
-                stats["bcast_bytes"] += t.nbytes * self._nrecv[key]
+                stats["bcast_bytes"] += t[0].nbytes * self._nrecv[key]
             stats["bcast_ops"] += len(bcast_ops)
         out = np.empty_like(host_tiles)
         p, q = msched.grid
@@ -871,24 +1278,24 @@ class MultiDeviceJaxExecutor:
             lrow = self._local_row[d].__getitem__
             if op.kind is OpKind.BCAST:
                 key = (op.i, op.j, op.k, op.src)
-                w = host_d[d][lrow(op.i), op.j].astype(
-                    _wire_dtype(lad[op.cls], cdt))
+                w = _make_wire(host_d[d][lrow(op.i), op.j],
+                               lad[op.cls], cdt)
                 jax.block_until_ready(w)
                 wire_of[key] = w
                 stats["bcast_ops"] += 1
-                stats["bcast_bytes"] += w.nbytes * self._nrecv[key]
+                stats["bcast_bytes"] += w[0].nbytes * self._nrecv[key]
             elif op.kind is OpKind.RECV:
                 key = (op.i, op.j, op.k, op.src)
-                t = jax.device_put(wire_of[key], self.devices[d])
+                wire = jax.device_put(wire_of[key], self.devices[d])
+                t = _unwire(wire, cdt)
                 if op.slot_c >= 0:
-                    slots_d[d] = slots_d[d].at[op.slot_c].set(t.astype(cdt))
+                    slots_d[d] = slots_d[d].at[op.slot_c].set(t)
                     jax.block_until_ready(slots_d[d])
                 else:
-                    host_d[d] = host_d[d].at[lrow(op.i), op.j].set(
-                        t.astype(cdt))
+                    host_d[d] = host_d[d].at[lrow(op.i), op.j].set(t)
                     jax.block_until_ready(host_d[d])
                 stats["recv_ops"] += 1
-                stats["recv_bytes"] += t.nbytes
+                stats["recv_bytes"] += wire[0].nbytes
                 pending[key] -= 1
                 if pending[key] == 0:
                     del wire_of[key]
@@ -919,7 +1326,9 @@ def make_multidevice_jax_executor(msched: MultiDeviceSchedule,
                                   compute_dtype=jnp.float64,
                                   use_pallas: bool = False,
                                   interpret: bool = True,
-                                  devices=None) -> MultiDeviceJaxExecutor:
+                                  devices=None,
+                                  fuse_columns: bool = False,
+                                  ) -> MultiDeviceJaxExecutor:
     """Build the per-device JAX executor for a multi-device schedule.
 
     Returns a callable ``host_tiles -> factored host_tiles`` (f64 NumPy in
@@ -929,7 +1338,7 @@ def make_multidevice_jax_executor(msched: MultiDeviceSchedule,
     """
     return MultiDeviceJaxExecutor(msched, compute_dtype,
                                   use_pallas=use_pallas, interpret=interpret,
-                                  devices=devices)
+                                  devices=devices, fuse_columns=fuse_columns)
 
 
 # --------------------------------------------------------------------------
@@ -942,7 +1351,11 @@ def plan_for_matrix(a_tiles: np.ndarray, eps_target: float | None,
     if eps_target is None:
         return uniform_plan(nt, "f64", ladder)
     norms, total = tile_norms(a_tiles)
-    return assign_precision(norms, total, eps_target, ladder)
+    # amax-aware classification: tiles outside e4m3's representable band
+    # no longer qualify for the unscaled FP8 class (the scaled class is
+    # unaffected — its per-tile scale recentres the band)
+    return assign_precision(norms, total, eps_target, ladder,
+                            tile_amax=_tile_amax(a_tiles))
 
 
 def ooc_cholesky(

@@ -1,0 +1,223 @@
+"""Pallas TPU megakernel: one launch per fused column step.
+
+The unfused executor dispatches one kernel per tile op — for column ``k``
+of a left-looking tile Cholesky that is ``k`` SYRKs + 1 POTRF on the
+diagonal and, per owned row ``m > k``, ``k`` GEMMs + 1 TRSM: ``O(nt * k)``
+launches whose HBM->VMEM traffic re-reads the same panel-history tiles
+over and over.  This kernel runs the whole column step in a *single*
+``pallas_call``:
+
+* grid ``(R, K)`` — ``R`` output tiles (row 0 is the diagonal when
+  ``with_diag``), ``K`` accumulation steps.  The TPU grid executes
+  sequentially row-major, so row 0 (the POTRF) completes before any TRSM
+  row consumes its factor from VMEM scratch.
+* same-shape tile GEMMs are batched across rows: step ``(r, kk)`` is
+  ``acc_r -= hist[r, kk] @ bhist[kk]^T`` with the B operand (the diagonal
+  row's history) broadcast across the ``r`` axis — for ``r = 0`` and
+  ``hist[0] = bhist`` that is exactly the SYRK.
+* the tile being updated stays resident in a VMEM accumulator across all
+  ``K`` steps; the triangular solve / factorization runs in the same
+  launch on the final step (``pl.when``), against the VMEM-resident
+  factor — no HBM round-trip between the update wave and the solve.
+* the per-tile precision down-cast runs *in the epilogue*: each output
+  row carries a class id, and scaled-FP8 rows additionally track their
+  amax at store time and fold the power-of-two scale into the cast
+  (see ``repro.core.precision.fp8_scale`` and docs/kernels.md).
+
+Launch accounting: the executors and benchmarks count kernel dispatches
+through :func:`launch_counts` — every call here bumps ``fused_column``
+(one per column step), every wrapper in :mod:`repro.kernels.ops` bumps
+``tile_op`` (one per unfused tile op).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_JNP_DTYPES = {
+    "f64": jnp.float64,
+    "f32": jnp.float32,
+    "f16": jnp.float16,
+    "bf16": jnp.bfloat16,
+    "f8e4m3": jnp.float8_e4m3fn,
+    "f8e4m3s": jnp.float8_e4m3fn,
+}
+
+# trace-time kernel dispatch counters (see launch_counts)
+_LAUNCHES = {"fused_column": 0, "tile_op": 0}
+
+
+def launch_counts() -> dict:
+    """Kernel dispatches since the last reset: ``fused_column`` counts
+    fused column-step launches, ``tile_op`` unfused per-tile-op launches
+    (incremented by the :mod:`repro.kernels.ops` wrappers)."""
+    return dict(_LAUNCHES)
+
+
+def reset_launch_counts() -> None:
+    for k in _LAUNCHES:
+        _LAUNCHES[k] = 0
+
+
+def count_tile_op() -> None:
+    _LAUNCHES["tile_op"] += 1
+
+
+def _fp8_scale_of(amax, dtype):
+    """Power-of-two scale for a scaled-FP8 tile from its amax: largest
+    ``2^e`` with ``amax * 2^e <= 448``.  Computed via frexp so jax and
+    numpy agree bitwise (a log2/floor boundary could differ by one ulp
+    and shift the scale a whole octave)."""
+    m, e = jnp.frexp(amax)
+    exp = (8 - e) + jnp.where(m <= 0.875, 1, 0)
+    s = jnp.exp2(exp.astype(dtype))
+    ok = jnp.isfinite(amax) & (amax > 0)
+    return jnp.where(ok, s, jnp.asarray(1.0, dtype))
+
+
+def _round_class(x, name: str):
+    """Round-trip one tile through a storage class inside the kernel
+    epilogue (the executors' ``_jx_round`` semantics: f64 degrades to the
+    compute dtype when x64 is off; the scaled-FP8 class applies its
+    store-time amax scale before the cast and inverts it after)."""
+    if name == "f64":
+        if not jax.config.jax_enable_x64 or x.dtype == jnp.float64:
+            return x
+        return x.astype(jnp.float64).astype(x.dtype)
+    if _JNP_DTYPES[name] == x.dtype:
+        return x
+    if name == "f8e4m3s":
+        s = _fp8_scale_of(jnp.max(jnp.abs(x)), x.dtype)
+        return ((x * s).astype(jnp.float8_e4m3fn).astype(x.dtype)) / s
+    return x.astype(_JNP_DTYPES[name]).astype(x.dtype)
+
+
+def _epilogue(x, cls_id, ladder):
+    """Class-indexed epilogue cast: ``cls_id`` selects which storage
+    class the result is rounded through (-1 = leave unrounded; the
+    executor's own STORE will round it)."""
+    out = x
+    for idx, name in enumerate(ladder):
+        out = jnp.where(cls_id == idx, _round_class(x, name), out)
+    return out
+
+
+def _chol_tile(c):
+    """Column-recursive in-VMEM Cholesky (the potrf.py loop)."""
+    a = 0.5 * (c + c.T)
+    n = a.shape[0]
+    rows = jax.lax.iota(jnp.int32, n)
+
+    def col(j, l):
+        v = a[:, j] - l @ l[j, :]
+        d = jnp.sqrt(v[j])
+        colv = jnp.where(rows >= j, v / d, jnp.zeros_like(v))
+        return l.at[:, j].set(colv)
+
+    return jax.lax.fori_loop(0, n, col, jnp.zeros_like(a))
+
+
+def _trsm_tile(l, c):
+    """Forward substitution X L^T = C in VMEM (the trsm.py loop)."""
+    n = l.shape[0]
+
+    def col(j, x):
+        v = (c[:, j] - x @ l[j, :]) / l[j, j]
+        return x.at[:, j].set(v)
+
+    return jax.lax.fori_loop(0, n, col, jnp.zeros_like(c))
+
+
+def _fused_kernel(c_ref, h_ref, b_ref, l_ref, cls_ref, o_ref, acc_ref,
+                  l_scr, *, k_steps, with_diag, ladder):
+    r = pl.program_id(0)
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = c_ref[0].astype(acc_ref.dtype)
+
+    a = h_ref[0, 0].astype(acc_ref.dtype)
+    b = b_ref[0].astype(acc_ref.dtype)
+    acc_ref[...] -= jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+
+    @pl.when(kk == k_steps - 1)
+    def _final():
+        cls_id = cls_ref[0, 0]
+        if with_diag:
+            @pl.when(r == 0)
+            def _diag():
+                # the epilogue-rounded factor goes to scratch too: the
+                # row TRSMs must solve against the *stored* (class-
+                # rounded) diagonal, exactly as the unfused trace reads
+                # it back after its STORE
+                l = _epilogue(_chol_tile(acc_ref[...]), cls_id, ladder)
+                l_scr[...] = l
+                o_ref[0] = l.astype(o_ref.dtype)
+
+            @pl.when(r > 0)
+            def _row():
+                x = _trsm_tile(l_scr[...], acc_ref[...])
+                o_ref[0] = _epilogue(x, cls_id, ladder).astype(o_ref.dtype)
+        else:
+            x = _trsm_tile(l_ref[...].astype(acc_ref.dtype), acc_ref[...])
+            o_ref[0] = _epilogue(x, cls_id, ladder).astype(o_ref.dtype)
+
+
+def fused_column_step(c_stack, hist, bhist, l_kk, cls_ids, *,
+                      ladder, with_diag: bool, interpret: bool = True):
+    """One fused column step: trailing update + solve, one launch.
+
+    Args:
+      c_stack: ``[R, tb, tb]`` tiles to update.  With ``with_diag`` row 0
+        is the diagonal tile (SYRK wave + POTRF); every later row gets
+        the GEMM wave + TRSM against the in-launch factor.  Without
+        ``with_diag`` every row is a panel row solved against ``l_kk``.
+      hist: ``[R, K, tb, tb]`` A-operand history (``A[m, j]`` for
+        ``j < k``).  ``K = 0`` is allowed (column 0: pure solve).
+      bhist: ``[K, tb, tb]`` B-operand history — the diagonal row's
+        panel tiles ``A[k, j]``; with ``with_diag``, ``hist[0] == bhist``.
+      l_kk: ``[tb, tb]`` pre-factored diagonal (ignored with
+        ``with_diag`` — pass zeros).
+      cls_ids: ``[R]`` int32 storage-class index per output row for the
+        epilogue cast (-1 leaves a row unrounded).
+      ladder: the precision-plan ladder naming the class indices.
+      with_diag: statically selects the POTRF-in-launch variant.
+
+    Returns ``[R, tb, tb]``: the factored diagonal (row 0, with_diag)
+    and solved panel rows, epilogue-cast per class.
+    """
+    r_tiles, tb, _ = c_stack.shape
+    k_hist = hist.shape[1]
+    if k_hist == 0:     # pure-solve column: accumulate an exact zero
+        hist = jnp.zeros((r_tiles, 1, tb, tb), dtype=c_stack.dtype)
+        bhist = jnp.zeros((1, tb, tb), dtype=c_stack.dtype)
+        k_hist = 1
+    acc_dtype = (jnp.float64 if c_stack.dtype == jnp.float64
+                 else jnp.float32)
+    cls_arr = jnp.asarray(cls_ids, dtype=jnp.int32).reshape(r_tiles, 1)
+    _LAUNCHES["fused_column"] += 1
+    kernel = functools.partial(_fused_kernel, k_steps=k_hist,
+                               with_diag=with_diag, ladder=tuple(ladder))
+    return pl.pallas_call(
+        kernel,
+        grid=(r_tiles, k_hist),
+        out_shape=jax.ShapeDtypeStruct((r_tiles, tb, tb), c_stack.dtype),
+        in_specs=[
+            pl.BlockSpec((1, tb, tb), lambda r, kk: (r, 0, 0)),     # C
+            pl.BlockSpec((1, 1, tb, tb), lambda r, kk: (r, kk, 0, 0)),  # A
+            pl.BlockSpec((1, tb, tb), lambda r, kk: (kk, 0, 0)),    # B
+            pl.BlockSpec((tb, tb), lambda r, kk: (0, 0)),           # L in
+            pl.BlockSpec((1, 1), lambda r, kk: (r, 0)),             # cls
+        ],
+        out_specs=pl.BlockSpec((1, tb, tb), lambda r, kk: (r, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((tb, tb), acc_dtype),
+                        pltpu.VMEM((tb, tb), acc_dtype)],
+        interpret=interpret,
+    )(c_stack, hist, bhist, l_kk, cls_arr)

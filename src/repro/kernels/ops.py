@@ -14,6 +14,10 @@ from .potrf import potrf as _potrf_pallas
 from .trsm import trsm as _trsm_pallas
 from .syrk import syrk_update as _syrk_pallas
 from .mxp_gemm import mxp_gemm_update as _gemm_pallas
+# fused column-step megakernel (CholeskyConfig.fuse_columns) + the
+# launch accounting shared by fused and unfused dispatch
+from .fused_column import (fused_column_step, launch_counts,  # noqa: F401
+                           reset_launch_counts)
 
 _F64 = (jnp.float64,)
 

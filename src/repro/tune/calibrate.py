@@ -43,7 +43,7 @@ from repro.core.analytics import GB, HardwareModel
 from repro.core.precision import BYTES, LADDERS
 
 # classes measured by default: every precision name any ladder can assign
-_ALL_CLASSES = ("f64", "f32", "f16", "bf16", "f8e4m3")
+_ALL_CLASSES = ("f64", "f32", "f16", "bf16", "f8e4m3", "f8e4m3s")
 
 # fallback device-memory capacity when the backend reports none (CPU CI):
 # deliberately small so OOC feasibility filtering stays exercised.
@@ -125,13 +125,16 @@ def _measure_kernels(tb: int, classes, repeats: int) -> dict:
     a_host = jnp.asarray(rng.standard_normal((tb, tb)), dtype=compute_dtype)
     b_host = jnp.asarray(rng.standard_normal((tb, tb)), dtype=compute_dtype)
 
+    from repro.core.cholesky import _jx_round
+
     rates: dict = {task: {} for task in _TASK_FLOP_COUNT}
     for cls_name in classes:
-        wire = _class_dtype(cls_name)
 
         def through(x):
             # class round-trip: what LOAD does to every operand tile
-            return x.astype(wire).astype(compute_dtype)
+            # (the scaled-FP8 class applies its per-tile amax scale
+            # around the cast — _jx_round is the executor's own path)
+            return _jx_round(x, cls_name, compute_dtype)
 
         jobs = {
             "gemm": jax.jit(lambda c, a, b: kf["gemm"](
@@ -158,6 +161,60 @@ def _measure_kernels(tb: int, classes, repeats: int) -> dict:
                 continue
             rates[task][cls_name] = _TASK_FLOP_COUNT[task](tb) / dt
     return rates
+
+
+def _measure_fused(tb: int, classes, repeats: int,
+                   r_tiles: int = 4, k_hist: int = 2) -> dict:
+    """Time the fused column-step megakernel per class and return
+    ``{"fused_column": {class: flop_rate}}``.
+
+    One launch runs the whole column step (update wave + POTRF + row
+    TRSMs with the epilogue cast fused in), so its rate is directly
+    comparable to the sum of the unfused per-op rates — the simulator
+    and :mod:`benchmarks.roofline` use exactly this comparison to decide
+    whether ``fuse_columns`` wins on the calibrated backend.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.precision import LADDERS as _LADS
+    from repro.kernels.fused_column import fused_column_step
+
+    compute_dtype = (jnp.float64 if jax.config.jax_enable_x64
+                     else jnp.float32)
+    rng = np.random.default_rng(0)
+    spd = np.eye(tb) * (2.0 * tb)
+    spd += rng.standard_normal((tb, tb)) @ rng.standard_normal((tb, tb)).T / tb
+    c_stack = jnp.asarray(
+        np.stack([spd] + [rng.standard_normal((tb, tb))
+                          for _ in range(r_tiles - 1)]), dtype=compute_dtype)
+    hist = jnp.asarray(rng.standard_normal((r_tiles, k_hist, tb, tb)) / tb,
+                       dtype=compute_dtype)
+    bhist = hist[0]
+    l_kk = jnp.zeros((tb, tb), dtype=compute_dtype)
+    # FLOPs of the whole step: R*K tile GEMMs + POTRF + (R-1) TRSMs
+    flops = (r_tiles * k_hist * 2 * tb**3 + tb**3 / 3.0
+             + (r_tiles - 1) * tb**3)
+
+    rates: dict = {}
+    for cls_name in classes:
+        # the class's position in whichever ladder carries it (the
+        # epilogue is ladder-indexed)
+        lad = next((l for l in _LADS.values() if cls_name in l), None)
+        if lad is None:
+            continue
+        cls_ids = jnp.full((r_tiles,), lad.index(cls_name), dtype=jnp.int32)
+
+        def run():
+            return fused_column_step(c_stack, hist, bhist, l_kk, cls_ids,
+                                     ladder=lad, with_diag=True,
+                                     interpret=True)
+        try:
+            run().block_until_ready()                      # compile/warm
+            dt = _best_seconds(run, repeats)
+        except Exception:
+            continue
+        rates[cls_name] = flops / dt
+    return {"fused_column": rates} if rates else {}
 
 
 def _measure_bandwidth(sizes_mb, repeats: int) -> tuple[float, float]:
@@ -391,6 +448,10 @@ def calibrate(tb: int = 256,
             raise ValueError(f"unknown precision class {c!r}; "
                              f"expected a subset of {_ALL_CLASSES}")
     kernel_flops = _measure_kernels(tb, classes, repeats)
+    # the fused column-step megakernel, timed as one launch: rates land
+    # under kernel_flops["fused_column"] next to the per-op kernels, so
+    # fused-vs-unfused comparisons ride the same measured model
+    kernel_flops.update(_measure_fused(tb, classes, repeats))
     h2d_bw, d2h_bw = _measure_bandwidth(transfer_sizes_mb, repeats)
     link_bw = _measure_link_bandwidth(transfer_sizes_mb, repeats)
     disk_read_bw, disk_write_bw = _measure_disk_bandwidth(

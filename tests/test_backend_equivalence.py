@@ -322,3 +322,143 @@ def test_single_device_three_way(policy):
     ref = np.linalg.cholesky(a)
     assert np.abs(l_jax - ref).max() < 1e-11
     assert np.abs(l_jax - l_np).max() < 1e-13
+
+
+# ---------------------------------------------------------------------------
+# Fused column-step megakernels (CholeskyConfig.fuse_columns): the fused
+# trace swaps every column step's compute group for one pallas launch but
+# must leave the *data-movement record* — and the factor — equivalent.
+
+def test_fused_three_way_single_device():
+    """ndev=1: fused jax == unfused jax == numpy oracle == LAPACK, with
+    the executed transfer view identical to the static schedule's (the
+    fused trace changes compute launches, never transfers)."""
+    n, tb = 128, 16
+    a = random_spd(n, seed=29)
+    fused = repro.plan(n, tb=tb, policy="v3", backend="jax",
+                       fuse_columns=True).compile()
+    l_fused = fused.factor(a)
+    l_jax = repro.plan(n, tb=tb, policy="v3",
+                       backend="jax").compile().factor(a)
+    l_np = repro.plan(n, tb=tb, policy="v3",
+                      backend="numpy").compile().factor(a)
+    assert np.abs(l_fused - np.linalg.cholesky(a)).max() < 1e-10
+    assert np.abs(l_fused - l_jax).max() < 1e-12
+    assert np.abs(l_fused - l_np).max() < 1e-12
+    # executed == scheduled bytes: the fused executor's transfer stats
+    # are the schedule's own LOAD/STORE record, unchanged by fusion
+    sched = fused.schedule
+    t = fused.stats["transfers"]
+    assert t["h2d_bytes"] == sched.loads_bytes() > 0
+    assert t["d2h_bytes"] == sched.stores_bytes() > 0
+    # repeated factorization: no retrace, bitwise-identical replay
+    traces = fused.stats["jit_traces"]
+    l2 = fused.factor(a)
+    assert fused.stats["jit_traces"] == traces
+    assert np.array_equal(l_fused, l2)
+
+
+def test_fused_three_way_ndev2():
+    """ndev=2 on forced host devices: the fused multi-device executor ==
+    numpy replay == LAPACK, executed BCAST/RECV counters == schedule ==
+    simulator, and the fused factor matches the unfused executor's."""
+    out = _run_sub("""
+        import numpy as np, jax
+        jax.config.update('jax_enable_x64', True)
+        import repro
+        from repro.core.analytics import HW, crosscheck_executed_volume
+        from repro.core.cholesky import run_multidevice_numpy
+        from repro.core.tiling import from_tiles, random_spd, to_tiles
+
+        n, tb = 128, 16
+        a = random_spd(n, seed=31)
+        cfg = repro.CholeskyConfig(tb=tb, policy='v3', ndev=2,
+                                   backend='jax', fuse_columns=True,
+                                   eps_target=1e-6, ladder='tpu-scaled')
+        solver = repro.plan(n, cfg.specialize(a)).compile()
+        l_fused = solver.factor(a)
+        assert np.abs(l_fused - np.linalg.cholesky(a)).max() < 1e-3
+        l_np = np.tril(from_tiles(run_multidevice_numpy(
+            to_tiles(a, tb), solver.schedule)))
+        assert np.abs(l_fused - l_np).max() < 1e-8
+        base = repro.plan(n, cfg.specialize(a),
+                          fuse_columns=False).compile()
+        l_base = base.factor(a)
+        assert np.abs(l_fused - l_base).max() < 1e-8
+        cc = crosscheck_executed_volume(solver.schedule,
+                                        solver.transfer_stats(),
+                                        hw=HW['gh200'])
+        assert cc['match'], cc['mismatches']
+        assert solver.transfer_stats() == base.transfer_stats()
+        traces = solver.stats['jit_traces']
+        l2 = solver.factor(a)
+        assert solver.stats['jit_traces'] == traces
+        assert np.array_equal(l_fused, l2)
+        print('OK')
+    """, devices=2)
+    assert "OK" in out
+
+
+def test_fused_three_way_lookahead():
+    """Fused segments under the pipelined emitter (lookahead=1): the
+    recv-free dispatch chunks merge into wider fused segments, but the
+    factor and the executed byte record stay those of the schedule."""
+    out = _run_sub("""
+        import numpy as np, jax
+        jax.config.update('jax_enable_x64', True)
+        import repro
+        from repro.core.analytics import HW, crosscheck_executed_volume
+        from repro.core.cholesky import run_multidevice_numpy
+        from repro.core.tiling import from_tiles, random_spd, to_tiles
+
+        n, tb = 128, 16
+        a = random_spd(n, seed=37)
+        cfg = repro.CholeskyConfig(tb=tb, policy='v3', ndev=2,
+                                   lookahead=1, backend='jax',
+                                   fuse_columns=True)
+        solver = repro.plan(n, cfg).compile()
+        assert solver.schedule.lookahead == 1
+        l_fused = solver.factor(a)
+        assert np.abs(l_fused - np.linalg.cholesky(a)).max() < 1e-10
+        l_np = np.tril(from_tiles(run_multidevice_numpy(
+            to_tiles(a, tb), solver.schedule)))
+        assert np.abs(l_fused - l_np).max() < 1e-12
+        cc = crosscheck_executed_volume(solver.schedule,
+                                        solver.transfer_stats(),
+                                        hw=HW['gh200'])
+        assert cc['match'], cc['mismatches']
+        # the pipeline (and the fused segment merging) reorders
+        # transfers but adds none
+        assert (solver.transfer_stats()['recv_bytes']
+                == solver.schedule.bcast_bytes())
+        print('OK')
+    """, devices=2)
+    assert "OK" in out
+
+
+def test_fused_three_way_spill():
+    """Fused segments over the bounded host tier (host_slots > 0): the
+    fused spill executor == numpy spill replay == LAPACK, with executed
+    FETCH/SPILL bytes == scheduled == simulated."""
+    from repro.core.analytics import HW, simulate
+    from repro.core.cholesky import run_schedule_spill
+    from repro.core.spill import ArrayTileStore
+
+    n, tb, host_slots = 128, 16, 10
+    a = random_spd(n, seed=41)
+    fused = repro.plan(n, tb=tb, policy="v3", backend="jax",
+                       host_slots=host_slots, fuse_columns=True).compile()
+    l_fused = fused.factor(a)
+    assert np.abs(l_fused - np.linalg.cholesky(a)).max() < 1e-10
+    sched = fused.schedule.to_single()
+    store = ArrayTileStore(to_tiles(a, tb))
+    run_schedule_spill(store, sched)
+    l_np = np.tril(from_tiles(store.to_tiles()))
+    assert np.abs(l_fused - l_np).max() < 1e-12
+    # executed disk lane == static schedule == event simulator
+    t = fused.stats["transfers"]
+    assert t["fetched_bytes"] == sched.fetch_bytes() > 0
+    assert t["spilled_bytes"] == sched.spill_bytes() > 0
+    r = simulate(sched, HW["gh200"])
+    assert t["fetched_bytes"] == r.fetch_bytes
+    assert t["spilled_bytes"] == r.spill_bytes

@@ -1,0 +1,265 @@
+"""Kernel-numerics harness for the fused column-step megakernel.
+
+The fused path (``CholeskyConfig.fuse_columns``) replaces one column
+step's whole op group — SYRK wave + POTRF on the diagonal, GEMM wave +
+TRSM per row, epilogue precision casts — with a single ``pallas_call``
+(:func:`repro.kernels.fused_column.fused_column_step`).  Everything else
+in the repo assumes those numerics are *exactly* the unfused executor's:
+same accumulation order, same rounding events, TRSMs solving against the
+stored (class-rounded) diagonal.  This module pins that contract:
+
+* property sweeps (hypothesis when installed, fixed-seed sampling
+  otherwise) of the raw kernel against an op-by-op unfused replay,
+  across tile sizes, history depths, row counts, precision classes, and
+  both kernel variants (POTRF-in-launch / solve-against-given-factor);
+* the executor-level equivalence ``fuse_columns=True == False`` on whole
+  factorizations, per policy and ladder;
+* launch accounting: the fused path dispatches exactly ONE kernel per
+  column step on the paper's policies (v2/v3);
+* the flag-off path stays bit-identical with unchanged ``jit_traces``
+  (the PR 9 goldens pin the op stream itself in
+  tests/test_golden_schedule.py).
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cholesky import (_jx_round, _make_kernel_fns,
+                                 make_jax_executor, plan_for_matrix)
+from repro.core.precision import EPS, LADDERS
+from repro.core.schedule import build_schedule
+from repro.core.tiling import from_tiles, random_spd, to_tiles
+from repro.kernels.fused_column import (fused_column_step, launch_counts,
+                                        reset_launch_counts)
+
+CLASSES = ("f64", "f32", "bf16", "f8e4m3", "f8e4m3s")
+
+
+def _ladder_for(cls_name: str):
+    return next(lad for lad in LADDERS.values() if cls_name in lad)
+
+
+def _tol(cls_name: str) -> float:
+    # identical op order and identical rounding events mean the fused
+    # and unfused results agree to accumulation round-off — except when
+    # a 1-ulp accumulator difference lands on a class-quantum boundary,
+    # where the epilogue may round to the adjacent representable value
+    return max(1e-12, 4.0 * EPS[cls_name])
+
+
+def _column_inputs(rng, r_tiles, k_hist, tb, with_diag):
+    """Random column-step operands shaped like the executor's group."""
+    spd = np.eye(tb) * (2.0 * tb)
+    g = rng.standard_normal((tb, tb))
+    spd += g @ g.T / tb
+    rows = [spd if with_diag else rng.standard_normal((tb, tb))]
+    rows += [rng.standard_normal((tb, tb)) for _ in range(r_tiles - 1)]
+    c_stack = jnp.asarray(np.stack(rows), dtype=jnp.float64)
+    hist = jnp.asarray(rng.standard_normal((r_tiles, k_hist, tb, tb)) / tb,
+                       dtype=jnp.float64)
+    bhist = hist[0] if with_diag else jnp.asarray(
+        rng.standard_normal((k_hist, tb, tb)) / tb, dtype=jnp.float64)
+    l_kk = jnp.asarray(np.linalg.cholesky(spd), dtype=jnp.float64)
+    return c_stack, hist, bhist, l_kk
+
+
+def _unfused_column(c_stack, hist, bhist, l_kk, cls_ids, ladder, with_diag):
+    """Op-by-op replay of the group the megakernel replaces, through the
+    executor's own kernel fns and ``_jx_round`` store semantics."""
+    kf = _make_kernel_fns(use_pallas=False, interpret=True)
+    r_tiles, k_hist = hist.shape[0], hist.shape[1]
+    out = []
+    if with_diag:
+        c = c_stack[0]
+        for kk in range(k_hist):
+            c = kf["gemm"](c, hist[0, kk], bhist[kk])   # SYRK == self-GEMM
+        diag = _jx_round(kf["potrf"](c), ladder[cls_ids[0]], jnp.float64)
+        out.append(diag)
+        start = 1
+    else:
+        diag = l_kk
+        start = 0
+    for r in range(start, r_tiles):
+        c = c_stack[r]
+        for kk in range(k_hist):
+            c = kf["gemm"](c, hist[r, kk], bhist[kk])
+        # the row solves against the *stored* (rounded) factor — exactly
+        # what the unfused trace reads back after the diagonal's STORE
+        x = kf["trsm"](diag, c)
+        out.append(_jx_round(x, ladder[cls_ids[r]], jnp.float64))
+    return jnp.stack(out)
+
+
+def _check_fused_vs_unfused(tb, r_tiles, k_hist, cls_name, with_diag,
+                            seed=0, compiled=False):
+    rng = np.random.default_rng(seed)
+    ladder = _ladder_for(cls_name)
+    c_stack, hist, bhist, l_kk = _column_inputs(rng, r_tiles, k_hist, tb,
+                                                with_diag)
+    cls_ids = [ladder.index(cls_name)] * r_tiles
+    fused_fn = fused_column_step
+    if compiled:
+        fused_fn = jax.jit(fused_column_step,
+                           static_argnames=("ladder", "with_diag",
+                                            "interpret"))
+    got = np.asarray(fused_fn(c_stack, hist, bhist, l_kk,
+                              jnp.asarray(cls_ids, dtype=jnp.int32),
+                              ladder=ladder, with_diag=with_diag))
+    want = np.asarray(_unfused_column(c_stack, hist, bhist, l_kk, cls_ids,
+                                      ladder, with_diag))
+    if with_diag:
+        got, want = np.tril(got[0]), np.tril(want[0])  # compare factors
+        scale = max(np.abs(want).max(), 1.0)
+        assert np.abs(got - want).max() <= _tol(cls_name) * scale
+        return
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(got - want).max() <= _tol(cls_name) * scale
+
+
+# --------------------------------------------------------------------------
+# property sweeps: raw kernel vs op-by-op replay
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(tb=st.sampled_from([32, 64]),
+       r_tiles=st.integers(min_value=1, max_value=4),
+       k_hist=st.integers(min_value=0, max_value=3),
+       cls_name=st.sampled_from(CLASSES),
+       with_diag=st.booleans(),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_fused_equals_unfused_property(tb, r_tiles, k_hist, cls_name,
+                                       with_diag, seed):
+    _check_fused_vs_unfused(tb, r_tiles, k_hist, cls_name, with_diag,
+                            seed=seed)
+
+
+@pytest.mark.parametrize("tb", [32, 64, 128])
+@pytest.mark.parametrize("cls_name", CLASSES)
+def test_fused_equals_unfused_all_tb(tb, cls_name):
+    """The deterministic tb sweep the ISSUE pins: every class at every
+    acceptance tile size, both kernel variants."""
+    _check_fused_vs_unfused(tb, 3, 2, cls_name, with_diag=True, seed=7)
+    _check_fused_vs_unfused(tb, 2, 1, cls_name, with_diag=False, seed=8)
+
+
+@pytest.mark.parametrize("cls_name", ["f64", "f8e4m3s"])
+def test_fused_compiled_equals_eager(cls_name):
+    """Jit-wrapping the launch (how the executors actually run it) is
+    bitwise-identical to the eager call."""
+    rng = np.random.default_rng(3)
+    ladder = _ladder_for(cls_name)
+    c_stack, hist, bhist, l_kk = _column_inputs(rng, 3, 2, 32, True)
+    cls_ids = jnp.asarray([ladder.index(cls_name)] * 3, dtype=jnp.int32)
+    kw = dict(ladder=ladder, with_diag=True)
+    eager = np.asarray(fused_column_step(c_stack, hist, bhist, l_kk,
+                                         cls_ids, **kw))
+    jitted = np.asarray(jax.jit(fused_column_step,
+                                static_argnames=("ladder", "with_diag",
+                                                 "interpret"))(
+        c_stack, hist, bhist, l_kk, cls_ids, **kw))
+    assert np.array_equal(eager, jitted)
+
+
+# --------------------------------------------------------------------------
+# executor level: whole factorizations, fused vs unfused
+# --------------------------------------------------------------------------
+
+def _matern(n):
+    from repro.geo.matern import generate_locations, matern_covariance
+    locs = generate_locations(n, seed=1)
+    return matern_covariance(locs) + 0.05 * np.eye(n)
+
+
+@pytest.mark.parametrize("policy", ["v2", "v3", "v4"])
+@pytest.mark.parametrize("ladder", ["tpu", "tpu-scaled"])
+def test_executor_fused_equals_unfused(policy, ladder):
+    nt, tb = 6, 16
+    a = _matern(nt * tb)
+    tiles = to_tiles(a, tb)
+    plan = plan_for_matrix(tiles, 1e-7, ladder=ladder)
+    sched = build_schedule(nt, tb, policy, plan=plan)
+    lf = np.asarray(make_jax_executor(sched, fuse_columns=True)(
+        jnp.asarray(tiles)))
+    lu = np.asarray(make_jax_executor(sched, fuse_columns=False)(
+        jnp.asarray(tiles)))
+    diff = np.abs(lf - lu).max() / np.abs(lu).max()
+    assert diff < 1e-12, (policy, ladder, diff)
+
+
+def test_launch_count_one_per_column_step():
+    """The acceptance criterion: on the paper's policies the fused path
+    dispatches exactly one megakernel per column step (nt launches for
+    an nt-tile factorization) with zero per-tile-op kernels."""
+    nt, tb = 6, 16
+    tiles = to_tiles(random_spd(nt * tb, seed=5), tb)
+    for policy in ("v2", "v3"):
+        sched = build_schedule(nt, tb, policy)
+        exe = make_jax_executor(sched, fuse_columns=True)
+        reset_launch_counts()
+        exe(jnp.asarray(tiles))
+        counts = launch_counts()
+        assert counts["fused_column"] == nt, (policy, counts)
+        assert counts["tile_op"] == 0, (policy, counts)
+
+
+def test_unfused_counts_per_tile_ops():
+    nt, tb = 4, 8
+    tiles = to_tiles(random_spd(nt * tb, seed=5), tb)
+    sched = build_schedule(nt, tb, "v3")
+    exe = make_jax_executor(sched, fuse_columns=False)
+    reset_launch_counts()
+    exe(jnp.asarray(tiles))
+    counts = launch_counts()
+    assert counts["fused_column"] == 0, counts
+    # one dispatch per compute op: nt potrf + sum of trsm/syrk/gemm
+    n_compute = nt * (nt + 1) * (nt + 2) // 6  # tile ops of an nt grid
+    assert counts["tile_op"] == n_compute, (counts, n_compute)
+
+
+# --------------------------------------------------------------------------
+# flag-off lockdown: default path untouched
+# --------------------------------------------------------------------------
+
+def test_flag_off_bitwise_and_traces():
+    """``fuse_columns=False`` (and the config default) runs the exact
+    PR 9 executor: bit-identical factors across repeated calls, one jit
+    trace, and zero fused launches."""
+    import repro
+    n, tb = 96, 16
+    a = random_spd(n, seed=13)
+    cfg = repro.CholeskyConfig(tb=tb, policy="v3", backend="jax")
+    assert cfg.fuse_columns is False
+    solver = repro.plan(n, cfg).compile()
+    reset_launch_counts()
+    l1 = solver.factor(a)
+    assert launch_counts()["fused_column"] == 0
+    traces = solver.stats["jit_traces"]
+    l2 = solver.factor(a)
+    assert solver.stats["jit_traces"] == traces
+    assert np.array_equal(l1, l2)
+    assert np.abs(l1 - np.linalg.cholesky(a)).max() < 1e-10
+
+
+def test_config_fused_end_to_end():
+    """The flag threads from CholeskyConfig through plan/compile to the
+    fused executor and matches the unfused factor."""
+    import repro
+    n, tb = 96, 16
+    a = random_spd(n, seed=17)
+    base = repro.CholeskyConfig(tb=tb, policy="v3", backend="jax")
+    fused = repro.CholeskyConfig(tb=tb, policy="v3", backend="jax",
+                                 fuse_columns=True)
+    l_base = repro.plan(n, base).compile().factor(a)
+    reset_launch_counts()
+    l_fused = repro.plan(n, fused).compile().factor(a)
+    assert launch_counts()["fused_column"] == n // tb
+    assert np.abs(l_fused - l_base).max() / np.abs(l_base).max() < 1e-12
+
+
+def test_fuse_columns_requires_jax_backend():
+    import repro
+    with pytest.raises(ValueError, match="fuse_columns"):
+        repro.CholeskyConfig(tb=16, backend="numpy", fuse_columns=True)

@@ -3,8 +3,10 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.precision import (EPS, LADDERS, assign_precision, tile_norms,
-                                  uniform_plan)
+from repro.core.precision import (EPS, FP8_MAX, FP8_MIN_NORMAL, LADDERS,
+                                  assign_precision, class_eps, fp8_scale,
+                                  fp8_unscaled_eps, scale_table, tile_amax,
+                                  tile_norms, uniform_plan)
 
 
 def _norms(nt, decay=1e-4, seed=0):
@@ -92,6 +94,84 @@ def test_property_assignment_valid(nt, seed, eps):
             if c > 0:
                 ratio = n_col * norms[i, j] / total
                 assert ratio <= eps / EPS[plan.ladder[c]] + 1e-12
+
+
+def test_scaled_ladders():
+    assert LADDERS["tpu-scaled"] == ("f64", "f32", "bf16", "f8e4m3s")
+    assert LADDERS["gpu-scaled"] == ("f64", "f32", "f16", "f8e4m3s")
+    assert EPS["f8e4m3s"] == EPS["f8e4m3"] == 2.0 ** -4
+
+
+def test_fp8_scale_band():
+    """The per-tile scale always recentres amax into (FP8_MAX/2,
+    FP8_MAX] with an exact power of two; degenerate amaxes scale by 1."""
+    rng = np.random.default_rng(0)
+    for amax in 10.0 ** rng.uniform(-30, 30, 500):
+        s = fp8_scale(float(amax))
+        m, e = np.frexp(s)
+        assert m == 0.5 and s > 0          # exact power of two
+        assert FP8_MAX / 2 < amax * s <= FP8_MAX, (amax, s)
+    # boundary pins: 448 itself stays put, one ulp above halves
+    assert fp8_scale(FP8_MAX) == 1.0
+    assert fp8_scale(np.nextafter(FP8_MAX, np.inf)) == 0.5
+    assert fp8_scale(1.0) == 256.0
+    assert fp8_scale(0.0) == 1.0
+    assert fp8_scale(float("inf")) == 1.0
+    assert fp8_scale(float("nan")) == 1.0
+
+
+def test_fp8_unscaled_eps_degrades_out_of_band():
+    u = EPS["f8e4m3"]
+    assert fp8_unscaled_eps(1.0) == u                   # in band
+    assert fp8_unscaled_eps(FP8_MAX) == u
+    sat = fp8_unscaled_eps(10.0 * FP8_MAX)              # saturation
+    assert sat == 1.0 - FP8_MAX / (10.0 * FP8_MAX)
+    assert fp8_unscaled_eps(FP8_MIN_NORMAL / 1024) == 1.0   # full flush
+    # the scaled class never degrades
+    assert class_eps("f8e4m3s", amax=10.0 * FP8_MAX) == u
+    assert class_eps("f8e4m3s", amax=FP8_MIN_NORMAL / 1024) == u
+    # amax=None preserves the historical format-eps behaviour
+    assert class_eps("f8e4m3", amax=None) == u
+
+
+def test_classification_boundary_amax_aware():
+    """The unit pin of the classification boundary: a tile whose ratio
+    sits between eps_target and 16x eps_target is FP8-eligible exactly
+    when the class achieves the format's 2^-4 — granted in band, denied
+    (unscaled) once amax saturates e4m3, kept (scaled) regardless."""
+    nt, eps = 2, 1e-6
+    norms = np.ones((nt, nt))
+    total = nt / (8.0 * eps)            # ratio == 8 eps, needs eps <= 2^-3
+    in_band = np.full((nt, nt), 1.0)
+    saturating = np.full((nt, nt), 1e4)
+    grant = assign_precision(norms, total, eps, ladder="tpu",
+                             tile_amax=in_band)
+    deny = assign_precision(norms, total, eps, ladder="tpu",
+                            tile_amax=saturating)
+    keep = assign_precision(norms, total, eps, ladder="tpu-scaled",
+                            tile_amax=saturating)
+    assert grant.name(1, 0) == "f8e4m3"
+    assert deny.name(1, 0) != "f8e4m3"
+    assert keep.name(1, 0) == "f8e4m3s"
+
+
+def test_scale_table_rides_plan():
+    from repro.core.tiling import to_tiles
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((64, 64))
+    a = x @ x.T + 64 * np.eye(64)
+    tiles = to_tiles(a, 16)
+    norms, total = tile_norms(tiles)
+    plan = assign_precision(norms, total, 1e-4, ladder="tpu-scaled",
+                            tile_amax=tile_amax(tiles))
+    table = scale_table(tiles, plan)
+    am = tile_amax(tiles)
+    for j in range(plan.nt):
+        for i in range(plan.nt):
+            if plan.name(i, j) == "f8e4m3s":
+                assert table[i, j] == np.float32(fp8_scale(float(am[i, j])))
+            else:
+                assert table[i, j] == 1.0
 
 
 def test_tile_norms_symmetric_weighting():
